@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: rows, timing, artifact JSON."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save_artifact(name: str, data: Any) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    return path
+
+
+def row(name: str, us_per_call: float, derived: str) -> Dict[str, Any]:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False
+
+
+def quick_mode() -> bool:
+    return os.environ.get("BENCH_QUICK", "0") == "1"

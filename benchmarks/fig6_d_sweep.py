@@ -1,0 +1,43 @@
+"""Fig. 6: effect of the number of providers d (n=20, k=5, M=1GB, MSR,
+capacities U[10,120] Mbps).
+
+Paper claims (Section VI-A): FR/TR/FTR reduce regeneration time by 50-70%
+vs STAR in most cases; FTR <= min(FR, TR) everywhere; FR beats TR at large
+d and vice versa at small d; tree schemes consume more total bandwidth.
+"""
+from __future__ import annotations
+
+from repro.core import CodeParams
+from repro.storage import compare_schemes, uniform
+
+from .common import Timer, quick_mode, row, save_artifact
+
+N, K, M_BLOCKS = 20, 5, 8000.0  # 1 GB in 1-Mb blocks
+SCHEMES = ("star", "fr", "tr", "ftr")
+
+
+def run():
+    quick = quick_mode()
+    trials = 5 if quick else 30
+    ds = [6, 10, 15, 19] if quick else list(range(K + 1, N))
+    rows, artifact = [], {"params": {"n": N, "k": K, "M": M_BLOCKS,
+                                     "trials": trials}, "points": []}
+    for d in ds:
+        p = CodeParams.msr(n=N, k=K, d=d, M=M_BLOCKS)
+        with Timer() as t:
+            stats = compare_schemes(p, uniform(), SCHEMES, trials, seed=42 + d)
+        point = {"d": d}
+        for s in SCHEMES:
+            st = stats[s]
+            point[s] = {"norm_time": st.mean_norm_time,
+                        "norm_traffic": st.mean_norm_traffic,
+                        "time_s": st.mean_time,
+                        "plan_ms": st.plan_seconds * 1e3}
+        artifact["points"].append(point)
+        rows.append(row(
+            f"fig6/d={d}",
+            t.seconds / (trials * len(SCHEMES)) * 1e6,
+            "norm_time " + " ".join(
+                f"{s}={stats[s].mean_norm_time:.3f}" for s in SCHEMES)))
+    save_artifact("fig6_d_sweep", artifact)
+    return rows

@@ -1,0 +1,38 @@
+"""Fig. 7: effect of bandwidth variance (n=20, k=5, d=10, M=1GB, MSR).
+
+Paper claims: ~90% reduction for U1[0.3,120]; at tight distributions
+(U4, U5) TR degenerates to STAR but FTR still saves 10-20%.
+"""
+from __future__ import annotations
+
+from repro.core import CodeParams
+from repro.storage import FIG7_DISTRIBUTIONS, compare_schemes
+
+from .common import Timer, quick_mode, row, save_artifact
+
+N, K, D, M_BLOCKS = 20, 5, 10, 8000.0
+SCHEMES = ("star", "fr", "tr", "ftr")
+
+
+def run():
+    quick = quick_mode()
+    trials = 5 if quick else 30
+    p = CodeParams.msr(n=N, k=K, d=D, M=M_BLOCKS)
+    rows, artifact = [], {"params": {"n": N, "k": K, "d": D, "M": M_BLOCKS,
+                                     "trials": trials}, "points": []}
+    for dist_name, sampler in FIG7_DISTRIBUTIONS.items():
+        with Timer() as t:
+            stats = compare_schemes(p, sampler, SCHEMES, trials, seed=7)
+        point = {"distribution": dist_name}
+        for s in SCHEMES:
+            st = stats[s]
+            point[s] = {"norm_time": st.mean_norm_time,
+                        "norm_traffic": st.mean_norm_traffic}
+        artifact["points"].append(point)
+        rows.append(row(
+            f"fig7/{dist_name}",
+            t.seconds / (trials * len(SCHEMES)) * 1e6,
+            "norm_time " + " ".join(
+                f"{s}={stats[s].mean_norm_time:.3f}" for s in SCHEMES)))
+    save_artifact("fig7_bandwidth", artifact)
+    return rows

@@ -1,0 +1,56 @@
+"""Beyond-paper table: checkpoint-shard recovery on the TPU-fleet topology.
+
+Monte-Carlo over host failures in 2-pod recovery groups with background
+traffic and stragglers: predicted regeneration time per scheme, speedup vs
+uniform STAR, and planning latency — the deployment-shaped version of the
+paper's Fig. 6/7 evaluation (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import CodeParams, plan_fr, plan_ftr, plan_star, plan_tr
+from repro.ft import Fleet, FleetConfig, choose_providers
+
+from .common import quick_mode, row, save_artifact
+
+SCHEMES = {"star": plan_star, "fr": plan_fr, "tr": plan_tr, "ftr": plan_ftr}
+
+
+def run():
+    quick = quick_mode()
+    trials = 10 if quick else 60
+    params = CodeParams(n=8, k=4, d=6, M=64.0, alpha=16.0)
+    results = {}
+    for frac, tag in ((0.0, "healthy"), (0.15, "stragglers")):
+        fleet = Fleet(FleetConfig(num_pods=2, hosts_per_pod=16,
+                                  straggler_fraction=frac), seed=1)
+        rng = random.Random(2)
+        acc = {s: 0.0 for s in SCHEMES}
+        plan_ms = {s: 0.0 for s in SCHEMES}
+        for _ in range(trials):
+            group = rng.sample(range(fleet.num_hosts), params.n)
+            failed = rng.choice(group)
+            survivors = [h for h in group if h != failed]
+            providers = choose_providers(fleet, survivors, failed, params.d,
+                                         rng=rng)
+            overlay = fleet.snapshot_overlay(failed, providers, block_mb=64.0,
+                                             rng=rng)
+            for name, planner in SCHEMES.items():
+                t0 = time.perf_counter()
+                plan = planner(overlay, params)
+                plan_ms[name] += (time.perf_counter() - t0) * 1e3
+                acc[name] += plan.time
+        results[tag] = {s: acc[s] / trials for s in SCHEMES}
+        results[tag + "_plan_ms"] = {s: plan_ms[s] / trials for s in SCHEMES}
+    save_artifact("ft_recovery", results)
+    rows = []
+    for tag in ("healthy", "stragglers"):
+        r = results[tag]
+        rows.append(row(
+            f"ft_recovery/{tag}",
+            results[tag + "_plan_ms"]["ftr"] * 1e3,
+            " ".join(f"{s}={r[s]:.4f}s" for s in SCHEMES)
+            + f" speedup_ftr={r['star'] / r['ftr']:.2f}x"))
+    return rows

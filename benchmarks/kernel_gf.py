@@ -1,0 +1,55 @@
+"""GF(2^8) matmul kernel micro-benchmark.
+
+On this CPU container the Pallas kernel runs in interpret mode, so absolute
+wall time is NOT the deployment number; the derived column reports the
+bit-plane MXU cost model instead (64 int8 dots per GF MAC -> ceiling of
+197e12 * 2 / 64 ≈ 6.2e12 GF-MAC/s per v5e chip) alongside the interpret-
+mode and numpy-table timings for regression tracking.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.coding.gf import GF8
+from repro.kernels.ops import gf_matmul
+
+from .common import quick_mode, row, save_artifact
+
+PEAK_BF16 = 197e12
+GF_MAC_CEILING = PEAK_BF16 * 2 / 64  # int8 MXU rate / 64 bit-plane dots
+
+
+def _time(fn, reps=3):
+    fn()  # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    quick = quick_mode()
+    shapes = [(128, 512, 128)] if quick else [
+        (128, 512, 128), (256, 1024, 256), (512, 2048, 128)]
+    rng = np.random.default_rng(0)
+    rows, artifact = [], {"gf_mac_ceiling_per_chip": GF_MAC_CEILING,
+                          "points": []}
+    for (m, k, n) in shapes:
+        a = rng.integers(0, 256, (m, k), dtype=np.uint8)
+        b = rng.integers(0, 256, (k, n), dtype=np.uint8)
+        t_pallas = _time(lambda: np.asarray(gf_matmul(a, b)))
+        t_numpy = _time(lambda: GF8.matmul(a, b))
+        macs = m * k * n
+        tpu_est_s = macs / GF_MAC_CEILING
+        artifact["points"].append({
+            "shape": [m, k, n], "interpret_s": t_pallas, "numpy_s": t_numpy,
+            "tpu_ceiling_s": tpu_est_s})
+        rows.append(row(
+            f"kernel_gf/{m}x{k}x{n}",
+            t_pallas * 1e6,
+            f"numpy={t_numpy*1e6:.0f}us tpu_ceiling={tpu_est_s*1e6:.2f}us "
+            f"macs={macs}"))
+    save_artifact("kernel_gf", artifact)
+    return rows

@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads benchmarks/artifacts/dryrun/summary.json (written by
+``python -m repro.launch.dryrun --all``) and emits one row per
+(arch x shape x mesh) cell with the three roofline terms, the dominant
+bottleneck, peak per-device memory and the MODEL_FLOPS/HLO_FLOPS ratio.
+Also renders the markdown table consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import row, save_artifact
+
+SUMMARY = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun",
+                       "summary.json")
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.1e}"
+    if x < 10:
+        return f"{x:.3f}"
+    return f"{x:.1f}"
+
+
+def markdown_table(cells) -> str:
+    head = ("| arch | shape | mesh | peak GB/dev | t_comp s | t_mem s | "
+            "t_coll s | dominant | roofline frac | useful frac | note |")
+    sep = "|" + "---|" * 11
+    lines = [head, sep]
+    for c in cells:
+        if c["ok"] == "skip":
+            lines.append(f"| {c['arch']} | {c['shape']} | - | - | - | - | - |"
+                         f" SKIP | - | - | {c['why']} |")
+            continue
+        if not c["ok"]:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | "
+                         f"- | - | - | FAIL | - | - | see artifact |")
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['memory']['peak_bytes_per_device'] / 1e9:.2f} "
+            f"| {_fmt(r['t_compute'])} | {_fmt(r['t_memory'])} "
+            f"| {_fmt(r['t_collective'])} | {r['dominant'][2:]} "
+            f"| {r['roofline_fraction']:.4f} | {c['useful_fraction']:.3f} | |")
+    return "\n".join(lines)
+
+
+def run():
+    if not os.path.exists(SUMMARY):
+        return [row("roofline/missing", 0.0,
+                    "run `python -m repro.launch.dryrun --all` first")]
+    cells = json.load(open(SUMMARY))
+    ok = [c for c in cells if c["ok"] is True]
+    save_artifact("roofline_table", {"markdown": markdown_table(cells)})
+    rows = []
+    for c in ok:
+        r = c["roofline"]
+        rows.append(row(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            c["compile_s"] * 1e6,
+            f"dom={r['dominant'][2:]} frac={r['roofline_fraction']:.4f} "
+            f"peakGB={c['memory']['peak_bytes_per_device']/1e9:.2f} "
+            f"useful={c['useful_fraction']:.3f}"))
+    nbad = len([c for c in cells if c["ok"] is False])
+    rows.append(row("roofline/summary", 0.0,
+                    f"{len(ok)} compiled, {nbad} failed, "
+                    f"{len([c for c in cells if c['ok'] == 'skip'])} skipped"))
+    return rows

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Set BENCH_QUICK=1 for a fast
+smoke pass; full runs also write JSON artifacts under
+``benchmarks/artifacts/`` (consumed by EXPERIMENTS.md).
+
+Modules:
+  fig6_d_sweep    — Fig. 6 (regeneration time & bandwidth vs d)
+  fig7_bandwidth  — Fig. 7 (capacity-variance sweep)
+  fig8_alpha      — Fig. 8 (MSR -> MBR storage sweep)
+  fig10_rctree    — Fig. 10 (RCTREE MDS collapse, data-plane RLNC sim)
+  kernel_gf       — GF(2^8) Pallas kernel cost model + timings
+  ft_recovery     — beyond-paper: checkpoint-recovery planning on TPU fleet
+  roofline        — reads the dry-run artifacts (launch/dryrun.py) if present
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "fig6_d_sweep",
+    "fig7_bandwidth",
+    "fig8_alpha",
+    "fig10_rctree",
+    "kernel_gf",
+    "ft_recovery",
+    "roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+        except ModuleNotFoundError as e:
+            if f"benchmarks.{mod_name}" in str(e):
+                continue  # optional module not built yet
+            raise
+        try:
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+            sys.stdout.flush()
+        except Exception:
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark modules failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Checkpoint-shard regeneration walkthrough on a simulated 2-pod fleet.
+
+Saves an erasure-coded train-state checkpoint over 8 hosts, kills one host,
+compares the repair plans of STAR / FR / TR / FTR on the sampled
+heterogeneous overlay (fast intra-pod, slow cross-pod links + background
+traffic), executes the winner on real GF(2^8) shards, and proves the state
+restores bit-identically.
+
+Run:  PYTHONPATH=src python examples/regenerate_checkpoint.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.ft import ECCheckpoint, ErasureCoder, Fleet, FleetConfig
+from repro.models import init_params
+
+
+def main():
+    cfg = get_smoke_config("yi-6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "step": np.int32(1000)}
+
+    fleet = Fleet(FleetConfig(num_pods=2, hosts_per_pod=8,
+                              straggler_fraction=0.2), seed=4)
+    coder = ErasureCoder(n=8, k=4, d=6, blocks_per_host=16, seed=4)
+    # recovery group spans both pods (survives a pod loss of <= n-k hosts)
+    hosts = [0, 1, 2, 3, 8, 9, 10, 11]
+    ckpt = ECCheckpoint(fleet, coder, hosts, seed=4)
+    ckpt.save(state, step=1000)
+    nbytes = ckpt.group.block_bytes * coder.M
+    print(f"checkpoint: {nbytes/1e6:.2f} MB coded as (n=8, k=4, d=6) over "
+          f"hosts {hosts} (pods {[fleet.pod_of(h) for h in hosts]})")
+
+    failed = 9
+    print(f"\nhost {failed} fails (pod {fleet.pod_of(failed)})")
+    log = ckpt.on_host_failure(failed, scheme="auto")
+    d = log.decision
+    print(f"providers: {d.providers}")
+    print("predicted regeneration time per scheme:")
+    for name, t in sorted(d.alternatives.items(), key=lambda kv: kv[1]):
+        marker = "  <- chosen" if name == d.plan.scheme else ""
+        print(f"  {name:5s} {t:8.4f} s{marker}")
+    speedup = d.alternatives["star"] / d.predicted_s
+    print(f"regeneration {speedup:.2f}x faster than uniform STAR")
+    print(f"blocks moved: {log.report.blocks_moved:.0f} "
+          f"(full any-k reconstruction would move {coder.M})")
+
+    restored = ckpt.restore([failed, 0, 2, 10])
+    leaves_a = jax.tree_util.tree_leaves(state)
+    leaves_b = jax.tree_util.tree_leaves(restored)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(leaves_a, leaves_b))
+    print("state restored bit-identically from a set containing the "
+          "regenerated host: OK")
+
+
+if __name__ == "__main__":
+    main()

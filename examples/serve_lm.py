@@ -1,0 +1,38 @@
+"""Batched serving demo: prefill + continuous decode on the serving engine.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen2.5-14b"),  # GQA-style smoke config
+        num_layers=2, d_model=128, d_ff=256, vocab_size=512,
+        num_heads=8, num_kv_heads=2, head_dim=16)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=4, max_len=96, seed=1)
+
+    reqs = [Request(prompt=[(7 * i + j) % cfg.vocab_size for j in range(4 + i)],
+                    max_new_tokens=12, temperature=0.0 if i % 2 else 0.8,
+                    rid=i)
+            for i in range(10)]
+    t0 = time.perf_counter()
+    outs = eng.generate(reqs)
+    dt = time.perf_counter() - t0
+    tok = sum(len(o.tokens) for o in outs)
+    print(f"served {len(reqs)} requests / {tok} tokens in {dt:.2f}s "
+          f"({tok / dt:.1f} tok/s on one CPU core)")
+    for o in outs:
+        print(f"  rid={o.rid}: {o.tokens}")
+
+
+if __name__ == "__main__":
+    main()

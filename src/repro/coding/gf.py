@@ -1,0 +1,164 @@
+"""Finite-field arithmetic for the regenerating code (GF(2^8) and GF(2^16)).
+
+GF(2^8) uses the standard storage-systems polynomial x^8+x^4+x^3+x^2+1
+(0x11D) with generator 2; GF(2^16) uses 0x1100B.  The numpy paths are
+table-based (host-side planning/decoding); the jnp path in
+``repro.kernels.ref``/``gf_matmul`` uses a bit-plane decomposition that maps
+onto the TPU MXU (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+GF8_POLY = 0x11D
+GF16_POLY = 0x1100B
+
+
+@functools.lru_cache(maxsize=None)
+def _tables(bits: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(EXP, LOG) tables.  EXP has 2*(q-1) entries to skip the mod."""
+    poly = GF8_POLY if bits == 8 else GF16_POLY
+    q = 1 << bits
+    exp = np.zeros(2 * (q - 1), dtype=np.int64)
+    log = np.zeros(q, dtype=np.int64)
+    x = 1
+    for i in range(q - 1):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & q:
+            x ^= poly
+    exp[q - 1:] = exp[: q - 1]
+    return exp, log
+
+
+class GF:
+    """Galois field GF(2^bits), bits in {8, 16}; numpy vectorized."""
+
+    def __init__(self, bits: int = 8):
+        if bits not in (8, 16):
+            raise ValueError("bits must be 8 or 16")
+        self.bits = bits
+        self.q = 1 << bits
+        self.poly = GF8_POLY if bits == 8 else GF16_POLY
+        self.exp, self.log = _tables(bits)
+        self.dtype = np.uint8 if bits == 8 else np.uint16
+
+    # -- scalar/elementwise ------------------------------------------------
+
+    def mul(self, a, b):
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        out = self.exp[self.log[a] + self.log[b]]
+        return np.where((a == 0) | (b == 0), 0, out).astype(self.dtype)
+
+    def inv(self, a):
+        a = np.asarray(a, dtype=np.int64)
+        if np.any(a == 0):
+            raise ZeroDivisionError("inverse of 0 in GF")
+        return self.exp[(self.q - 1) - self.log[a]].astype(self.dtype)
+
+    def div(self, a, b):
+        return self.mul(a, self.inv(b))
+
+    def pow(self, a, e: int):
+        a = np.asarray(a, dtype=np.int64)
+        if e == 0:
+            return np.ones_like(a, dtype=self.dtype)
+        la = self.log[a] * (e % (self.q - 1))
+        out = self.exp[la % (self.q - 1)]
+        return np.where(a == 0, 0, out).astype(self.dtype)
+
+    # -- linear algebra ----------------------------------------------------
+
+    def matmul(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        """C = A @ B over GF (XOR-accumulate of field products)."""
+        A = np.asarray(A, dtype=np.int64)
+        B = np.asarray(B, dtype=np.int64)
+        assert A.ndim == 2 and B.ndim == 2 and A.shape[1] == B.shape[0]
+        logA = self.log[A]
+        logB = self.log[B]
+        out = np.zeros((A.shape[0], B.shape[1]), dtype=np.int64)
+        # row-blocked table lookups; zeros handled by masking
+        for k in range(A.shape[1]):
+            prod = self.exp[logA[:, k][:, None] + logB[k][None, :]]
+            prod = np.where((A[:, k][:, None] == 0) | (B[k][None, :] == 0), 0, prod)
+            out ^= prod
+        return out.astype(self.dtype)
+
+    def rank(self, A: np.ndarray) -> int:
+        """Rank over GF via Gaussian elimination."""
+        A = np.array(A, dtype=np.int64, copy=True)
+        rows, cols = A.shape
+        r = 0
+        for c in range(cols):
+            piv = None
+            for i in range(r, rows):
+                if A[i, c]:
+                    piv = i
+                    break
+            if piv is None:
+                continue
+            A[[r, piv]] = A[[piv, r]]
+            inv = int(self.inv(A[r, c]))
+            A[r] = self.mul(A[r], inv)
+            mask = A[:, c] != 0
+            mask[r] = False
+            if mask.any():
+                A[mask] ^= self.mul(A[mask, c][:, None], A[r][None, :]).astype(np.int64)
+            r += 1
+            if r == rows:
+                break
+        return r
+
+    def solve(self, A: np.ndarray, Y: np.ndarray) -> np.ndarray:
+        """Solve A X = Y over GF (A square, invertible)."""
+        A = np.array(A, dtype=np.int64, copy=True)
+        Y = np.array(Y, dtype=np.int64, copy=True)
+        n = A.shape[0]
+        assert A.shape == (n, n) and Y.shape[0] == n
+        for c in range(n):
+            piv = None
+            for i in range(c, n):
+                if A[i, c]:
+                    piv = i
+                    break
+            if piv is None:
+                raise np.linalg.LinAlgError("singular GF matrix")
+            A[[c, piv]] = A[[piv, c]]
+            Y[[c, piv]] = Y[[piv, c]]
+            inv = int(self.inv(A[c, c]))
+            A[c] = self.mul(A[c], inv)
+            Y[c] = self.mul(Y[c], inv)
+            mask = A[:, c] != 0
+            mask[c] = False
+            if mask.any():
+                f = A[mask, c][:, None]
+                A[mask] ^= self.mul(f, A[c][None, :]).astype(np.int64)
+                Y[mask] ^= self.mul(f, Y[c][None, :]).astype(np.int64)
+        return Y.astype(self.dtype)
+
+    def inv_matrix(self, A: np.ndarray) -> np.ndarray:
+        n = A.shape[0]
+        return self.solve(A, np.eye(n, dtype=np.int64))
+
+    # -- structured generators ----------------------------------------------
+
+    def cauchy_matrix(self, rows: int, cols: int) -> np.ndarray:
+        """Cauchy matrix: every square submatrix is nonsingular (true MDS).
+        Requires rows + cols <= q."""
+        if rows + cols > self.q:
+            raise ValueError(f"Cauchy needs rows+cols <= {self.q}")
+        x = np.arange(rows, dtype=np.int64)
+        y = np.arange(rows, rows + cols, dtype=np.int64)
+        return self.inv((x[:, None] ^ y[None, :]).astype(np.int64)).astype(self.dtype)
+
+    def random(self, shape, rng: np.random.Generator) -> np.ndarray:
+        return rng.integers(0, self.q, size=shape, dtype=np.uint32).astype(self.dtype)
+
+
+GF8 = GF(8)
+GF16 = GF(16)

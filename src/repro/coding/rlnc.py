@@ -1,0 +1,111 @@
+"""Random linear network coding data plane (paper Section II-A).
+
+A file of M blocks a_1..a_M is encoded into n*alpha coded blocks b_i =
+sum_j c_ij a_j and spread over n nodes (alpha blocks each).  Every coded
+block carries its length-M coding vector.  Regeneration, relaying and
+reconstruction are all GF matrix multiplications on (coding-vector, payload)
+pairs — the compute hot-spot accelerated by ``repro.kernels.gf_matmul``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .gf import GF, GF8
+
+
+@dataclasses.dataclass
+class CodedBlocks:
+    """A batch of coded blocks: coding vectors (num, M) + payload (num, B)."""
+
+    vectors: np.ndarray   # (num, M) over GF
+    payload: np.ndarray   # (num, block_bytes) over GF
+
+    def __post_init__(self):
+        assert self.vectors.shape[0] == self.payload.shape[0]
+
+    @property
+    def num(self) -> int:
+        return self.vectors.shape[0]
+
+    def concat(self, other: "CodedBlocks") -> "CodedBlocks":
+        return CodedBlocks(np.concatenate([self.vectors, other.vectors]),
+                           np.concatenate([self.payload, other.payload]))
+
+
+class RLNC:
+    """Stateless coding operations over a chosen field."""
+
+    def __init__(self, field: GF = GF8, matmul=None):
+        self.field = field
+        # pluggable GF matmul (e.g. the Pallas kernel wrapper); defaults to
+        # the table-based numpy path.
+        self._matmul = matmul if matmul is not None else field.matmul
+
+    # -- file distribution ---------------------------------------------------
+
+    def distribute(self, file_blocks: np.ndarray, n: int, alpha: int,
+                   rng: np.random.Generator) -> List[CodedBlocks]:
+        """Encode M file blocks into n nodes * alpha coded blocks (random
+        linear code; MDS with probability -> 1 for large fields)."""
+        M = file_blocks.shape[0]
+        C = self.field.random((n * alpha, M), rng)
+        payload = self._matmul(C, file_blocks)
+        return [CodedBlocks(C[i * alpha:(i + 1) * alpha],
+                            payload[i * alpha:(i + 1) * alpha])
+                for i in range(n)]
+
+    # -- regeneration --------------------------------------------------------
+
+    def encode(self, local: CodedBlocks, num_out: int,
+               rng: np.random.Generator) -> CodedBlocks:
+        """Provider-side: num_out random combinations of the local blocks."""
+        R = self.field.random((num_out, local.num), rng)
+        return CodedBlocks(self._matmul(R, local.vectors),
+                           self._matmul(R, local.payload))
+
+    def relay(self, received: CodedBlocks, own: CodedBlocks, num_out: int,
+              rng: np.random.Generator) -> CodedBlocks:
+        """Interior tree node: re-encode (received ++ freshly generated own
+        data) down to num_out blocks (Section V-A)."""
+        pool = received.concat(own)
+        R = self.field.random((num_out, pool.num), rng)
+        return CodedBlocks(self._matmul(R, pool.vectors),
+                           self._matmul(R, pool.payload))
+
+    def regenerate(self, received: CodedBlocks, alpha: int,
+                   rng: np.random.Generator) -> CodedBlocks:
+        """Newcomer: store alpha random combinations of everything received."""
+        R = self.field.random((alpha, received.num), rng)
+        return CodedBlocks(self._matmul(R, received.vectors),
+                           self._matmul(R, received.payload))
+
+    # -- reconstruction --------------------------------------------------------
+
+    def can_reconstruct(self, nodes: Sequence[CodedBlocks], M: int) -> bool:
+        V = np.concatenate([nd.vectors for nd in nodes])
+        return self.field.rank(V) >= M
+
+    def reconstruct(self, nodes: Sequence[CodedBlocks], M: int) -> np.ndarray:
+        """Recover the original M file blocks from >= M independent coded
+        blocks (MDS reconstruction, Section II-A)."""
+        V = np.concatenate([nd.vectors for nd in nodes])
+        P = np.concatenate([nd.payload for nd in nodes])
+        # pick M independent rows
+        idx, r = [], 0
+        work = np.array(V, dtype=np.int64, copy=True)
+        picked = np.zeros((0, V.shape[1]), dtype=np.int64)
+        for i in range(V.shape[0]):
+            cand = np.concatenate([picked, work[i:i + 1]])
+            if self.field.rank(cand) > r:
+                picked, r = cand, r + 1
+                idx.append(i)
+                if r == M:
+                    break
+        if r < M:
+            raise ValueError(f"rank {r} < M={M}: cannot reconstruct")
+        A = V[idx]
+        Y = P[idx]
+        return self.field.solve(A, Y)

@@ -1,0 +1,51 @@
+"""Core contribution of the paper: regeneration-time-minimizing repair
+planning for erasure-coded state over heterogeneous links.
+
+Schemes (all return :class:`~repro.core.params.RepairPlan`):
+
+* ``plan_star`` — conventional uniform-traffic star [3] (baseline);
+* ``plan_fr``   — flexible repair traffic on the star (Section III);
+* ``plan_tr``   — tree topology, uniform traffic (Section IV, Algorithm 1);
+* ``plan_ftr``  — flexible traffic on a searched tree (Section V, Algorithm 2);
+* ``plan_shah`` — the (beta_max, gamma) scheme of [6] (related-work baseline);
+* ``plan_rctree`` — RCTREE [7], the MDS-violating prior scheme (Appendix A);
+* ``plan_ort_uniform`` / ``plan_ort_flexible`` — exact brute force for small d.
+
+``InfoFlowGraph`` verifies the MDS property of any repair history by
+max-flow (Lemma 1); ``FeasibleRegion`` encodes Theorem-1 regions.
+"""
+from .params import (CodeParams, OverlayNetwork, RepairPlan, Edge,
+                     mbr_point, msr_point, plan_time, tree_flows, uniform_beta)
+from .regions import (FeasibleRegion, heuristic_region, msr_region, sigma,
+                      shah_region_thresholds, theorem6_example, uniform_point)
+from .star import fr_closed_form_msr, plan_fr, plan_shah, plan_star
+from .tree import plan_tr, tree_time_uniform
+from .ftr import eval_tree, plan_ftr
+from .ort import iter_rooted_trees, plan_ort_flexible, plan_ort_uniform
+from .rctree import plan_rctree
+from .infoflow import InfoFlowGraph, RepairEvent, event_from_plan
+
+SCHEMES = {
+    "star": plan_star,
+    "fr": plan_fr,
+    "tr": plan_tr,
+    "ftr": plan_ftr,
+    "shah": plan_shah,
+    "rctree": plan_rctree,
+}
+
+__all__ = [
+    "CodeParams", "OverlayNetwork", "RepairPlan", "Edge", "FeasibleRegion",
+    "InfoFlowGraph", "RepairEvent", "SCHEMES", "event_from_plan",
+    "eval_tree", "fr_closed_form_msr", "heuristic_region", "iter_rooted_trees",
+    "mbr_point", "msr_point", "msr_region", "plan_fr", "plan_ftr",
+    "plan_ort_flexible", "plan_ort_uniform", "plan_rctree", "plan_shah",
+    "plan_star", "plan_time", "plan_tr", "shah_region_thresholds", "sigma",
+    "theorem6_example", "tree_flows", "tree_time_uniform", "uniform_beta",
+    "uniform_point",
+]
+
+from .extensions import (plan_multi_failures, store_and_forward_time,
+                         streaming_time_with_latency)
+__all__ += ["plan_multi_failures", "store_and_forward_time",
+            "streaming_time_with_latency"]

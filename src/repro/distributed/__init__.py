@@ -1,0 +1,1 @@
+"""Sharding rules and distributed-runtime helpers."""

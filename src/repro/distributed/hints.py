@@ -1,0 +1,47 @@
+"""Activation-sharding hints.
+
+``hint(x, *spec)`` applies ``with_sharding_constraint`` against the ambient
+mesh installed by the launcher (``jax.sharding.set_mesh``).  Spec entries
+are mesh-axis names (or tuples); axes absent from the ambient mesh are
+dropped, and with no ambient mesh the call is a no-op — so model code can
+carry production sharding annotations while CPU smoke tests run unchanged.
+
+``BATCH`` expands to ("pod", "data") filtered by the mesh — the canonical
+batch sharding of DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH = ("pod", "data")
+
+SpecEntry = Union[None, str, Tuple[str, ...]]
+
+
+def _ambient_axes() -> Optional[Tuple[str, ...]]:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return None
+    if am is None or am.empty:
+        return None
+    return tuple(am.axis_names)
+
+
+def hint(x, *spec: SpecEntry):
+    axes = _ambient_axes()
+    if axes is None:
+        return x
+    def filt(e: SpecEntry):
+        if e is None:
+            return None
+        if isinstance(e, str):
+            return e if e in axes else None
+        kept = tuple(a for a in e if a in axes)
+        return kept if kept else None
+    entries = [filt(e) for e in spec]
+    # trailing axes of x not mentioned are unconstrained
+    return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -1,0 +1,204 @@
+"""Sharding rules for the production meshes (DESIGN.md §7).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model")
+multi-pod.  Policy:
+
+  * batch over ("pod", "data") — pure DP across pods (cheap DCN traffic:
+    one grad all-reduce), FSDP+TP inside a pod;
+  * params 2-D sharded: the "large input" dim over "data" (FSDP/ZeRO-3 —
+    GSPMD inserts the per-layer all-gathers) and the "parallel" dim
+    (heads / d_ff / experts / vocab) over "model" (TP/EP);
+  * optimizer state shards exactly like its param;
+  * KV caches: batch over data when divisible, else sequence over data
+    (long-context, batch=1), kv-heads over model.
+
+Rules are name-based over the param-tree paths produced by
+``repro.models.init_params``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings
+    "tok": ("model", None),
+    "unembed": ("model", None),
+    "patch_proj": (None, "model"),
+    "frame_proj": (None, "model"),
+    # attention (stacked leading dim handled by padding with None)
+    "wq": ("data", "model", None),
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),
+    "bq": ("model", None),
+    "bk": ("model", None),
+    "bv": ("model", None),
+    # dense mlp
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # moe — expert parallelism: experts over (pod, model), expert-ffn dim
+    # over data; the dense trunk never FSDP-gathers expert tables
+    "router": (None, "model"),
+    "we_gate": (("pod", "model"), None, "data"),
+    "we_up": (("pod", "model"), None, "data"),
+    "we_down": (("pod", "model"), "data", None),
+    # ssd
+    "in_proj": ("data", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "A_log": ("model",),
+    "D": ("model",),
+    "dt_bias": ("model",),
+    "norm_scale": ("model",),
+    "out_proj": ("model", "data"),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+
+def _path_names(path) -> list:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+    return names
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def _filter_divisible(mesh: Mesh, spec_entries, shape) -> Tuple:
+    """jit argument shardings must divide the dimension exactly (unlike
+    internal GSPMD constraints, which pad); drop entries that don't."""
+    out = []
+    for i, e in enumerate(spec_entries):
+        if e is not None and shape[i] % _axis_size(mesh, e) != 0:
+            e = None
+        out.append(e)
+    return tuple(out)
+
+
+_EXPERT_LEAVES = ("we_gate", "we_up", "we_down")
+
+
+def param_spec(mesh: Mesh, path, leaf, fsdp: bool = True) -> P:
+    names = _path_names(path)
+    leafname = names[-1]
+    rule = _PARAM_RULES.get(leafname)
+    if rule is None:
+        return P()
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    rule = tuple(rule)
+    if not fsdp and leafname not in _EXPERT_LEAVES:
+        # model-parallel-only params (no ZeRO-3 re-gather per microbatch);
+        # used when per-device state fits without the data axis
+        rule = tuple(None if e == "data" else e for e in rule)
+    # drop mesh axes the mesh doesn't have (e.g. "pod" on single-pod)
+    avail = set(mesh.axis_names)
+    def keep(e):
+        if e is None or isinstance(e, str):
+            return e if (e is None or e in avail) else None
+        kept = tuple(a for a in e if a in avail)
+        return kept if kept else None
+    rule = tuple(keep(e) for e in rule)
+    # stacked containers ('blocks', 'shared') prepend a layer axis
+    if ndim == len(rule) + 1:
+        rule = (None,) + rule
+    elif ndim != len(rule):
+        # unexpected rank (e.g. scalar): replicate
+        return P()
+    return P(*_filter_divisible(mesh, rule, leaf.shape))
+
+
+def param_shardings(mesh: Mesh, params_tree: Any, fsdp: bool = True) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(mesh, path, leaf,
+                                                          fsdp=fsdp)),
+        params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree: Any) -> Any:
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf):
+        entries = _filter_divisible(mesh, (ba,) + (None,) * (leaf.ndim - 1),
+                                    leaf.shape)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_tree: Any,
+                    batch_size: int) -> Any:
+    ba = batch_axes(mesh)
+    shard_batch = batch_size % data_size(mesh) == 0
+    kv_div = cfg.num_kv_heads % mesh.shape["model"] == 0
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name in ("k", "v", "shared_k", "shared_v"):
+            # (L|napp, B, S, KV, hd); when KV doesn't divide the model axis
+            # shard head_dim instead (divisible for every assigned arch)
+            kv_e, hd_e = ("model", None) if kv_div else (None, "model")
+            if shard_batch:
+                entries = (None, ba, None, kv_e, hd_e)
+            else:
+                entries = (None, None, "data", kv_e, hd_e)
+        elif name == "conv":    # (L, B, conv-1, C)
+            entries = (None, ba if shard_batch else None, None, "model")
+        elif name == "state":   # (L, B, Hs, P, N)
+            entries = (None, ba if shard_batch else None, "model", None, None)
+        else:
+            entries = (None,) * leaf.ndim
+        return NamedSharding(mesh, P(*_filter_divisible(mesh, entries,
+                                                        leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """(B, S, d) hidden-state constraint."""
+    return P(batch_axes(mesh), None, None)

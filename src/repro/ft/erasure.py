@@ -1,0 +1,96 @@
+"""Erasure coding of checkpoint pytrees into per-host shards.
+
+A checkpoint (params + optimizer state pytree) is flattened into a byte
+buffer, split into M equal blocks and RLNC-encoded into n * alpha coded
+blocks over a *recovery group* of n hosts (alpha = M/k each, MSR layout).
+Any k hosts reconstruct; a lost host is regenerated from d survivors with
+the paper's planners (repro.core) instead of full reconstruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.coding import GF8, RLNC, CodedBlocks
+from repro.core import CodeParams
+
+
+@dataclasses.dataclass
+class TreeSpec:
+    """Enough structure to rebuild the pytree from bytes."""
+    treedef: Any
+    shapes: List[Tuple[int, ...]]
+    dtypes: List[Any]
+    sizes: List[int]          # byte length per leaf
+    total_bytes: int
+
+
+def tree_to_bytes(tree: Any) -> Tuple[np.ndarray, TreeSpec]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrs = [np.asarray(l) for l in leaves]
+    bufs = [a.tobytes() for a in arrs]
+    flat = b"".join(bufs)
+    spec = TreeSpec(treedef=treedef,
+                    shapes=[a.shape for a in arrs],
+                    dtypes=[a.dtype for a in arrs],
+                    sizes=[len(b) for b in bufs],
+                    total_bytes=len(flat))
+    return np.frombuffer(flat, dtype=np.uint8), spec
+
+
+def bytes_to_tree(buf: np.ndarray, spec: TreeSpec) -> Any:
+    out, off = [], 0
+    raw = buf.tobytes()
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        out.append(np.frombuffer(raw[off:off + size], dtype=dtype
+                                 ).reshape(shape))
+        off += size
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+@dataclasses.dataclass
+class EncodedGroup:
+    """One recovery group: n host shards of an (n, k, d)-coded buffer."""
+    params: CodeParams
+    block_bytes: int
+    payload_bytes: int                  # original length (pre-padding)
+    shards: Dict[int, CodedBlocks]      # host id -> alpha coded blocks
+
+    def live_hosts(self) -> List[int]:
+        return sorted(self.shards)
+
+
+class ErasureCoder:
+    def __init__(self, n: int = 8, k: int = 4, d: int = 6,
+                 blocks_per_host: int = 16, seed: int = 0):
+        # MSR layout: alpha = M/k blocks per host
+        self.n, self.k, self.d = n, k, d
+        self.alpha = blocks_per_host
+        self.M = self.alpha * k
+        self.rl = RLNC(GF8)
+        self.rng = np.random.default_rng(seed)
+
+    def encode(self, buf: np.ndarray, hosts: Sequence[int]) -> EncodedGroup:
+        assert len(hosts) == self.n
+        payload = len(buf)
+        block_bytes = math.ceil(payload / self.M)
+        padded = np.zeros(block_bytes * self.M, dtype=np.uint8)
+        padded[:payload] = buf
+        blocks = padded.reshape(self.M, block_bytes)
+        node_blocks = self.rl.distribute(blocks, self.n, self.alpha, self.rng)
+        params = CodeParams(n=self.n, k=self.k, d=self.d, M=float(self.M),
+                            alpha=float(self.alpha))
+        return EncodedGroup(params=params, block_bytes=block_bytes,
+                            payload_bytes=payload,
+                            shards=dict(zip(hosts, node_blocks)))
+
+    def reconstruct(self, group: EncodedGroup,
+                    hosts: Optional[Sequence[int]] = None) -> np.ndarray:
+        hosts = list(hosts) if hosts is not None else group.live_hosts()[: self.k]
+        nodes = [group.shards[h] for h in hosts]
+        blocks = self.rl.reconstruct(nodes, self.M)
+        return blocks.reshape(-1)[: group.payload_bytes]

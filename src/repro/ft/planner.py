@@ -1,0 +1,66 @@
+"""Failure -> regeneration plan (the paper's algorithms as the repair engine).
+
+``plan_recovery`` snapshots the available bandwidth between the replacement
+host and the d chosen providers, runs the requested scheme(s) and returns
+the best plan with its predicted regeneration time.  ``auto`` evaluates
+star/FR/TR/FTR and picks the fastest — FTR by construction, but the others
+are kept for ablation output.  Straggler mitigation falls out naturally:
+a straggler is a low-available-bandwidth provider, so FR shifts traffic off
+it and TR/FTR route around it (paper Sections III-V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import (CodeParams, OverlayNetwork, RepairPlan, plan_fr,
+                        plan_ftr, plan_star, plan_tr)
+from .topology import Fleet
+
+_PLANNERS = {"star": plan_star, "fr": plan_fr, "tr": plan_tr, "ftr": plan_ftr}
+
+
+@dataclasses.dataclass
+class RecoveryDecision:
+    newcomer: int
+    providers: List[int]
+    overlay: OverlayNetwork
+    plan: RepairPlan
+    predicted_s: float
+    alternatives: Dict[str, float]      # scheme -> predicted time
+
+
+def choose_providers(fleet: Fleet, survivors: Sequence[int], newcomer: int,
+                     d: int, rng: Optional[random.Random] = None,
+                     prefer_local: bool = True) -> List[int]:
+    """Pick d providers; prefer same-pod hosts (fast tier) when available."""
+    rng = rng or fleet.rng
+    pool = sorted(survivors)
+    if not prefer_local:
+        return rng.sample(pool, d)
+    local = [h for h in pool if fleet.pod_of(h) == fleet.pod_of(newcomer)]
+    remote = [h for h in pool if h not in local]
+    rng.shuffle(local)
+    rng.shuffle(remote)
+    picked = (local + remote)[:d]
+    return sorted(picked)
+
+
+def plan_recovery(fleet: Fleet, params: CodeParams, newcomer: int,
+                  providers: Sequence[int], block_mb: float = 1.0,
+                  scheme: str = "auto",
+                  rng: Optional[random.Random] = None) -> RecoveryDecision:
+    overlay = fleet.snapshot_overlay(newcomer, providers, block_mb=block_mb,
+                                     rng=rng)
+    alts: Dict[str, float] = {}
+    best_name, best_plan = None, None
+    names = list(_PLANNERS) if scheme == "auto" else [scheme]
+    for name in names:
+        plan = _PLANNERS[name](overlay, params)
+        alts[name] = plan.time
+        if best_plan is None or plan.time < best_plan.time:
+            best_name, best_plan = name, plan
+    return RecoveryDecision(newcomer=newcomer, providers=list(providers),
+                            overlay=overlay, plan=best_plan,
+                            predicted_s=best_plan.time, alternatives=alts)

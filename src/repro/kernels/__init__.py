@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the coding hot-spot (GF(2^8) matmul).
+
+The LM dry-run stack is pure XLA (it must lower on the CPU backend with 512
+placeholder devices); kernels here serve the paper's RLNC coding plane.
+"""
+from .ops import gf_matmul, gf_matmul_numpy, gf_matmul_reference
+from .gf_matmul import gf_matmul_pallas
+from .ref import gf_matmul_ref
+
+__all__ = ["gf_matmul", "gf_matmul_numpy", "gf_matmul_reference",
+           "gf_matmul_pallas", "gf_matmul_ref"]

@@ -1,0 +1,60 @@
+"""Jitted public wrappers around the GF(2^8) matmul kernel.
+
+``gf_matmul`` pads to block multiples, dispatches to the Pallas kernel (on
+TPU) or its interpret-mode execution (CPU), and slices the result.  Padding
+with zeros is sound: 0 is the additive identity of GF(2^8) and 0*x = 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gf_matmul import gf_matmul_pallas
+from .ref import gf_matmul_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _padded_call(a, b, bm, bn, bk, interpret):
+    m, k = a.shape
+    _, n = b.shape
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_p = jnp.zeros((mp, kp), jnp.uint8).at[:m, :k].set(a)
+    b_p = jnp.zeros((kp, np_), jnp.uint8).at[:k, :n].set(b)
+    out = gf_matmul_pallas(a_p, b_p, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+def gf_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """GF(2^8) matmul with automatic padding; kernel on TPU, interpret on CPU."""
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _padded_call(a, b, bm, bn, bk, interpret)
+
+
+def gf_matmul_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Kernel-backed matmul with a numpy interface (pluggable into
+    :class:`repro.coding.rlnc.RLNC` to run the coding plane through the
+    kernel end-to-end)."""
+    return np.asarray(gf_matmul(np.asarray(a, np.uint8), np.asarray(b, np.uint8)))
+
+
+def gf_matmul_reference(a, b) -> jnp.ndarray:
+    """Pure-jnp oracle (no Pallas), exported for benchmarks/tests."""
+    return gf_matmul_ref(jnp.asarray(a, jnp.uint8), jnp.asarray(b, jnp.uint8))

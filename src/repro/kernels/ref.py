@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for GF(2^8) matrix multiplication.
+
+Bit-plane algorithm (the same math the Pallas kernel uses, unblocked):
+
+  * expand A and B into 8 one-bit planes each;
+  * carry-less polynomial product: plane t of the 15-coefficient product is
+    the GF(2) (parity) sum over i+j=t of  A_i @ B_j  — each an ordinary
+    integer matmul of 0/1 matrices (this is what lands on the TPU MXU);
+  * reduce the 15 planes mod x^8+x^4+x^3+x^2+1 (0x11D):  x^8 == 0x1D, so
+    plane t >= 8 folds into planes t-8+{0,2,3,4} (processed high-to-low);
+  * reassemble the 8 low planes into bytes.
+
+Parity can be taken once after the full K accumulation because XOR == sum
+mod 2 and int32 counts cannot overflow for K < 2^28.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# bit positions of 0x1D = x^4 + x^3 + x^2 + 1 (x^8 reduced)
+_FOLD = (0, 2, 3, 4)
+
+
+def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B over GF(2^8), A:(M,K) uint8, B:(K,N) uint8 -> (M,N) uint8."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0], (
+        a.shape, b.shape)
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    abits = [((a32 >> i) & 1) for i in range(8)]
+    bbits = [((b32 >> j) & 1) for j in range(8)]
+    planes = []
+    for t in range(15):
+        acc = None
+        for i in range(max(0, t - 7), min(7, t) + 1):
+            j = t - i
+            term = jnp.matmul(abits[i], bbits[j])
+            acc = term if acc is None else acc + term
+        planes.append(acc & 1)
+    for t in range(14, 7, -1):
+        p = planes[t]
+        for s in _FOLD:
+            planes[t - 8 + s] = planes[t - 8 + s] ^ p
+    out = planes[0]
+    for t in range(1, 8):
+        out = out | (planes[t] << t)
+    return out.astype(jnp.uint8)

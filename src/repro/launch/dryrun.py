@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the XLA_FLAGS assignment above MUST precede every other import
+# (jax locks the device count on first init), which is why this module has
+# no ``from __future__ import annotations`` and no module docstring first.
+
+# Multi-pod dry-run (deliverable e).
+#
+# Lowers + compiles every (architecture x shape x mesh) cell against the
+# production meshes (16x16 single-pod, 2x16x16 multi-pod) on 512 placeholder
+# CPU devices, records ``memory_analysis`` / ``cost_analysis`` and the
+# trip-count-aware HLO roofline terms (deliverable g).
+#
+# Single cell:   python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+# Multi-pod:     ... --multi-pod
+# Whole table:   python -m repro.launch.dryrun --all    (subprocess per cell,
+#                resumable via the JSON artifact cache)
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from typing import Any, Dict
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), "benchmarks", "artifacts",
+    "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: bool = False, overrides: "Dict[str, Any] | None" = None,
+             n_micro: "int | None" = None, grad_dtype: "str | None" = None,
+             fsdp: "bool | None" = None,
+             gather_once: bool = False) -> Dict[str, Any]:
+    import jax
+    from repro.configs import get_config
+    from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                            param_shardings, replicated)
+    from repro.launch import hlo_cost
+    from repro.launch.hlo_analysis import roofline_terms
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import TRAIN_MICROBATCHES, input_specs
+    from repro.models.config import SHAPES
+    from repro.train.optimizer import AdamWConfig, init_opt
+    from repro.train.step import (make_decode_step, make_prefill_step,
+                                  make_train_step)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    # §Perf default (hillclimb A3/A8): single-tile attention for short-seq
+    # training (chunking only pays for memory at 32k+), 2048-token loss chunks
+    merged = {}
+    if shape.kind == "train" and cfg.has_attention:
+        tile = min(shape.seq_len, 4096)
+        merged.update(q_chunk=tile, kv_chunk=tile)
+        if 0 < cfg.num_kv_heads < 16 <= cfg.num_heads:
+            merged.update(repeat_kv=True)  # §Perf C2: clean head sharding
+    if shape.kind == "train":
+        merged.update(loss_chunk=min(2048, cfg.loss_chunk * 4)
+                      if cfg.vocab_size > 100_000 else 2048)
+    merged.update(overrides or {})
+    if merged:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **merged)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    jax.sharding.set_mesh(mesh)  # ambient mesh for activation hints
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+    specs = input_specs(cfg, shape)
+
+    # per-arch memory policy: ZeRO-3/FSDP only where model-parallel-only
+    # state would overflow HBM; the 1T MoE uses Adafactor + bf16 grads
+    if fsdp is None:
+        fsdp = arch in ("qwen2.5-14b", "pixtral-12b")
+    huge = cfg.param_count() > 2e11
+    param_sh = param_shardings(mesh, specs["params"], fsdp=fsdp)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        if huge:
+            opt_cfg = AdamWConfig(mode="adafactor", momentum=False,
+                                  state_dtype="float32",
+                                  grad_dtype="bfloat16")
+        else:
+            opt_cfg = AdamWConfig(grad_dtype=grad_dtype or "float32")
+        opt_specs = jax.eval_shape(lambda p: init_opt(opt_cfg, p),
+                                   specs["params"])
+        # optimizer state shards like its parameter; the factored-v tree is
+        # path-compatible modulo the trailing {row,col} dicts, which the
+        # rule matcher resolves by leaf rank (rank mismatch -> replicated,
+        # rows/cols are small)
+        opt_sh = type(opt_specs)(
+            step=replicated(mesh),
+            m=(param_shardings(mesh, opt_specs.m, fsdp=fsdp)
+               if opt_specs.m != () else ()),
+            v=jax.tree_util.tree_map(lambda _: replicated(mesh), opt_specs.v)
+            if opt_cfg.mode == "adafactor"
+            else param_shardings(mesh, opt_specs.v, fsdp=fsdp))
+        batch_sh = batch_shardings(mesh, specs["batch"])
+        if n_micro is None:
+            n_micro = TRAIN_MICROBATCHES.get(arch, 4)
+        fn = make_train_step(cfg, opt_cfg, n_micro=n_micro,
+                              grad_shardings=param_sh,
+                              gather_weights_once=gather_once)
+        metrics_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh),
+                      "step": replicated(mesh)}
+        jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, metrics_sh))
+        lowered = jitted.lower(specs["params"], opt_specs, specs["batch"])
+    elif shape.kind == "prefill":
+        batch_sh = batch_shardings(mesh, specs["batch"])
+        ba = ("pod", "data") if multi_pod else ("data",)
+        vshard = "model" if cfg.vocab_size % 16 == 0 else None
+        logits_sh = NamedSharding(mesh, P(ba, vshard))
+        if cfg.is_encoder_only:
+            from repro.models import embed_inputs, forward_hidden
+            from repro.models.layers import apply_norm, unembed_table
+            import jax.numpy as jnp
+
+            def fn(params, batch):
+                h = embed_inputs(cfg, params, batch)
+                S = h.shape[1]
+                pos = jnp.arange(S, dtype=jnp.int32)
+                h, _ = forward_hidden(cfg, params, h, positions=pos)
+                h = apply_norm(cfg, params["final_norm"], h)
+                W = unembed_table(cfg, params["embed"])
+                return jnp.einsum("bsd,vd->bsv", h,
+                                  W.astype(h.dtype))  # frame unit logits
+
+            out_sh = NamedSharding(mesh, P(ba, None, vshard))
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:
+            cache_sh = cache_shardings(mesh, cfg, specs["cache"],
+                                       shape.global_batch)
+            fn = make_prefill_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh, cache_sh),
+                             out_shardings=(logits_sh, cache_sh))
+            lowered = jitted.lower(specs["params"], specs["batch"],
+                                   specs["cache"])
+    else:  # decode
+        cache_sh = cache_shardings(mesh, cfg, specs["cache"],
+                                   shape.global_batch)
+        ba = ("pod", "data") if multi_pod else ("data",)
+        shard_batch = shape.global_batch % (16 * (2 if multi_pod else 1)) == 0
+        tok_sh = NamedSharding(mesh, P(ba if shard_batch else None, None))
+        vshard = "model" if cfg.vocab_size % 16 == 0 else None
+        logits_sh = NamedSharding(mesh, P(ba if shard_batch else None,
+                                          vshard))
+        fn = make_decode_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(param_sh, cache_sh, tok_sh,
+                                           replicated(mesh)),
+                         out_shardings=(logits_sh, cache_sh))
+        lowered = jitted.lower(specs["params"], specs["cache"],
+                               specs["tokens"], specs["pos"])
+    lower_s = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    metrics = hlo_cost.analyze(txt)
+    terms = roofline_terms(metrics.flops, metrics.bytes,
+                           metrics.total_link_bytes)
+
+    # MODEL_FLOPS (useful-compute yardstick), per device
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+    model_flops_dev = model_flops / chips
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "ok": True, "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops_single_visit": cost.get("flops", 0.0),
+            "bytes_single_visit": cost.get("bytes accessed", 0.0),
+        },
+        "hlo_analyzer": {
+            "flops_per_device": metrics.flops,
+            "hbm_bytes_per_device": metrics.bytes,
+            "collective_link_bytes_per_device": metrics.total_link_bytes,
+            "collective_breakdown": metrics.coll_link_bytes,
+            "collective_counts": metrics.coll_counts,
+        },
+        "roofline": terms,
+        "model_flops_per_device": model_flops_dev,
+        "useful_fraction": (model_flops_dev / metrics.flops
+                            if metrics.flops else 0.0),
+    }
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    import gzip
+    hpz = os.path.join(ARTIFACT_DIR,
+                       f"{arch}_{shape_name}_{result['mesh']}.hlo.txt.gz")
+    with gzip.open(hpz, "wt") as f:
+        f.write(txt)
+    result["hlo_gz"] = hpz
+    if save_hlo:
+        hp = os.path.join(ARTIFACT_DIR,
+                          f"{arch}_{shape_name}_{result['mesh']}.hlo.txt")
+        with open(hp, "w") as f:
+            f.write(txt)
+        result["hlo_path"] = hp
+    return result
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> str:
+    return os.path.join(ARTIFACT_DIR, f"{arch}_{shape}_{mesh}.json")
+
+
+def run_all(force: bool = False, timeout_s: int = 3000) -> None:
+    from repro.configs import ARCH_IDS, shape_cells, skipped_cells
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    table = []
+    for arch in ARCH_IDS:
+        for shape in shape_cells(arch):
+            for mesh_flag, mesh_name in ((False, "16x16"), (True, "2x16x16")):
+                path = cell_path(arch, shape, mesh_name)
+                if os.path.exists(path) and not force:
+                    table.append(json.load(open(path)))
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", path]
+                if mesh_flag:
+                    cmd.append("--multi-pod")
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} ...",
+                      flush=True)
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=timeout_s)
+                if r.returncode != 0:
+                    fail = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                            "ok": False, "error": r.stderr[-4000:]}
+                    with open(path, "w") as f:
+                        json.dump(fail, f, indent=2)
+                    table.append(fail)
+                    print(f"  FAILED in {time.time()-t0:.0f}s:\n{r.stderr[-2000:]}")
+                else:
+                    table.append(json.load(open(path)))
+                    print(f"  ok in {time.time()-t0:.0f}s")
+        for shape, why in skipped_cells(arch).items():
+            table.append({"arch": arch, "shape": shape, "mesh": "-",
+                          "ok": "skip", "why": why})
+    summary = os.path.join(ARTIFACT_DIR, "summary.json")
+    with open(summary, "w") as f:
+        json.dump(table, f, indent=2)
+    bad = [t for t in table if t["ok"] is False]
+    print(f"\n{len(table)} cells recorded; {len(bad)} failures -> {summary}")
+    if bad:
+        for t in bad:
+            print("  FAIL:", t["arch"], t["shape"], t["mesh"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out")
+    args = ap.parse_args()
+    if args.all:
+        run_all(force=args.force)
+        return
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   save_hlo=args.save_hlo)
+    js = json.dumps(res, indent=2)
+    print(js)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(js)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Roofline-term extraction from compiled SPMD artifacts (deliverable g).
+
+``collective_bytes`` parses post-optimization HLO text and estimates the
+per-device link bytes of every collective with ring formulas:
+
+    all-reduce       2 (n-1)/n * size      (size = output bytes)
+    all-gather         (n-1)/n * size      (size = output bytes)
+    reduce-scatter     (n-1)/n * size      (size = input  = output * n)
+    all-to-all         (n-1)/n * size
+    collective-permute          1 * size
+
+where n is the replica-group size parsed from ``replica_groups=[g,n]<=...``
+(or counted from explicit ``{{...}}`` groups).  Sizes are the per-device
+HLO shapes (the module is the per-partition program).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# e.g.  bf16[8,128]{1,0}  or  f32[]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        first = m.group(1).strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    raw_bytes: Dict[str, float]     # sum of parsed shapes
+    link_bytes: Dict[str, float]    # ring-model per-device link traffic
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    counts = {op: 0 for op in _COLL_OPS}
+    raw = {op: 0.0 for op in _COLL_OPS}
+    link = {op: 0.0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        # match '<lhs type> opcode(' — opcode right after the '=' type
+        m = re.match(r"(?:ROOT\s+)?%[\w.\-]+\s*=\s*(.+?)\s+([a-z0-9\-]+)\(", s)
+        if not m:
+            continue
+        type_str, opcode = m.group(1), m.group(2)
+        # skip fused users / '-start' '-done' duplicates: count only starts
+        base = opcode.replace("-start", "")
+        if base not in _COLL_OPS or opcode.endswith("-done"):
+            continue
+        size = _shape_bytes(type_str)
+        n = _group_size(s, default_group)
+        counts[base] += 1
+        raw[base] += size
+        frac = (n - 1) / n if n > 1 else 0.0
+        if base == "all-reduce":
+            link[base] += 2.0 * frac * size
+        elif base == "all-gather":
+            link[base] += frac * size
+        elif base == "reduce-scatter":
+            link[base] += frac * size * n          # size parsed = output
+        elif base == "all-to-all":
+            link[base] += frac * size
+        elif base == "collective-permute":
+            link[base] += size
+    return CollectiveStats(counts, raw, link)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, link_bytes: float,
+                   ) -> Dict[str, float]:
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm_bytes / HBM_BW
+    t_coll = link_bytes / LINK_BW
+    terms = {"t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["bound_s"] = bound
+    terms["roofline_fraction"] = (t_comp / bound) if bound > 0 else 0.0
+    return terms

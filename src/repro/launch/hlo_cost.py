@@ -1,0 +1,435 @@
+"""Trip-count-aware cost analysis over post-optimization HLO text.
+
+``compiled.cost_analysis()`` visits every computation once — a
+``lax.scan``'s while body is counted a single time no matter its trip
+count, which silently undercounts scanned-layer models by ~L.  This module
+re-derives FLOPs / HBM bytes / collective link-bytes by walking the HLO
+call graph and multiplying while-loop bodies by their
+``known_trip_count`` (emitted by XLA after loop analysis).
+
+Model:
+  * FLOPs: dot ops only (2 * prod(output) * prod(lhs contracting dims)) —
+    matmul-dominated workloads; elementwise flops are ignored (they are
+    bandwidth, not compute);
+  * HBM bytes: per *top-level* op in each computation: unique operand bytes
+    + output bytes, skipping pure-metadata ops (parameter/constant/tuple/
+    get-tuple-element/bitcast) and control ops (while/conditional/call whose
+    bodies are traversed instead).  Fusion internals are not counted — the
+    fusion call site's operands/outputs are the actual HBM traffic;
+  * collectives: ring-model link bytes per op (see hlo_analysis), scaled by
+    the enclosing trip counts.
+
+Validated against compiled.cost_analysis() on scan-free probes in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import _COLL_OPS, _DTYPE_BYTES, _SHAPE_RE, _group_size
+
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[a-z0-9].*?\)?)\s+([a-z0-9\-]+)\((.*)$")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|to_apply|calls|true_computation|false_computation|branch_computations)=")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call",
+               "after-all", "partition-id", "replica-id", "iota"}
+_CONTROL = {"while", "conditional", "call", "fusion"}
+
+
+def _parse_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _parse_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_args(argstr: str) -> List[str]:
+    """Top-level comma split of 'op(...)' argument text (trailing attrs cut
+    by the caller)."""
+    args, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            args.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    if cur:
+        args.append("".join(cur).strip())
+    return [a for a in args if a]
+
+
+@dataclasses.dataclass
+class Metrics:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_link_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in _COLL_OPS})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {op: 0.0 for op in _COLL_OPS})
+
+    def add(self, other: "Metrics", scale: float = 1.0,
+            include_bytes: bool = True) -> None:
+        self.flops += other.flops * scale
+        if include_bytes:
+            self.bytes += other.bytes * scale
+        for k in self.coll_link_bytes:
+            self.coll_link_bytes[k] += other.coll_link_bytes[k] * scale
+            self.coll_counts[k] += other.coll_counts[k] * scale
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.coll_link_bytes.values())
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # everything after the '(' of the op
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: List[_Op] = []
+        self.shapes: Dict[str, str] = {}
+
+
+def _parse_module(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line) and ("=" not in line.split("(")[0]):
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if line.startswith("}"):
+            # keep cur for trailing attrs safety; reset
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            cur.ops.append(_Op(name, type_str, opcode, rest))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _called_comps(op: _Op) -> List[str]:
+    """Names of computations invoked by this op (body/calls/branches)."""
+    names = []
+    for attr in ("body", "to_apply", "calls", "true_computation",
+                 "false_computation"):
+        m = re.search(attr + r"=%?([\w.\-]+)", op.rest)
+        if m:
+            names.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+    if m:
+        for n in m.group(1).split(","):
+            names.append(n.strip().lstrip("%"))
+    return names
+
+
+def _dot_flops(comp: _Computation, op: _Op) -> float:
+    out_dims = _parse_dims(op.type_str)
+    if not out_dims:
+        return 0.0
+    out_n = 1
+    for d in out_dims[0][1]:
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([^}]*)\}", op.rest)
+    if not m:
+        return 2.0 * out_n  # dot with no contraction (outer product-ish)
+    idxs = [int(x) for x in m.group(1).split(",") if x.strip()]
+    args = _split_args(op.rest)
+    lhs_name = args[0].lstrip("%") if args else None
+    lhs_type = comp.shapes.get(lhs_name, "")
+    lhs_dims = _parse_dims(lhs_type)
+    if not lhs_dims:
+        return 2.0 * out_n
+    contract = 1
+    for i in idxs:
+        if i < len(lhs_dims[0][1]):
+            contract *= lhs_dims[0][1][i]
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(comp: _Computation, op: _Op) -> float:
+    out_dims = _parse_dims(op.type_str)
+    if not out_dims:
+        return 0.0
+    out_n = 1
+    for d in out_dims[0][1]:
+        out_n *= d
+    args = _split_args(op.rest)
+    if len(args) < 2:
+        return 2.0 * out_n
+    ker = _parse_dims(comp.shapes.get(args[1].lstrip("%"), ""))
+    kn = 1
+    if ker:
+        for d in ker[0][1]:
+            kn *= d
+    # approximate: 2 * out * kernel_elems / out_features
+    of = out_dims[0][1][-1] if out_dims[0][1] else 1
+    return 2.0 * out_n * max(kn // max(of, 1), 1)
+
+
+def analyze_report(text: str, top: int = 12) -> str:
+    """Debug view: top flop-contributing computations (with multiplicity)."""
+    comps = _parse_module(text)
+    # count effective trips per computation by walking from entry
+    trips: Dict[str, float] = {}
+    entry = None
+    for raw in text.splitlines():
+        if raw.strip().startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(raw.strip())
+            if m:
+                entry = m.group(1)
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        trips[name] = trips.get(name, 0.0) + mult
+        for op in comp.ops:
+            if op.opcode in _CONTROL:
+                scale = 1.0
+                if op.opcode == "while":
+                    tm = _TRIP_RE.search(op.rest)
+                    scale = float(tm.group(1)) if tm else 1.0
+                for c in _called_comps(op):
+                    if op.opcode == "while" and "cond" in c:
+                        continue
+                    walk(c, mult * scale)
+    walk(entry, 1.0)
+    rows = []
+    for name, mult in trips.items():
+        comp = comps[name]
+        fl = sum(_dot_flops(comp, op) for op in comp.ops if op.opcode == "dot")
+        if fl > 0:
+            rows.append((fl * mult, fl, mult, name))
+    rows.sort(reverse=True)
+    out = ["flops_total  flops_once  trips  computation"]
+    for tot, fl, mult, name in rows[:top]:
+        out.append(f"{tot:12.3e} {fl:11.3e} {mult:6.0f}  {name[:80]}")
+    return "\n".join(out)
+
+
+def analyze_report_bytes(text: str, top: int = 15) -> str:
+    """Debug view: top HBM-byte and collective contributors per computation."""
+    comps = _parse_module(text)
+    trips: Dict[str, float] = {}
+    entry = None
+    for raw in text.splitlines():
+        if raw.strip().startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(raw.strip())
+            if m:
+                entry = m.group(1)
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        trips[name] = trips.get(name, 0.0) + mult
+        for op in comp.ops:
+            if op.opcode in ("while", "conditional", "call"):
+                scale = 1.0
+                if op.opcode == "while":
+                    tm = _TRIP_RE.search(op.rest)
+                    scale = float(tm.group(1)) if tm else 1.0
+                for c in _called_comps(op):
+                    if op.opcode == "while" and "cond" in c:
+                        continue
+                    walk(c, mult * scale)
+    walk(entry, 1.0)
+
+    def comp_bytes(comp: _Computation) -> Tuple[float, float, List[str]]:
+        b, cl = 0.0, 0.0
+        coll_lines: List[str] = []
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if base in _COLL_OPS and not oc.endswith("-done"):
+                size = _bytes_of(op.type_str)
+                n = _group_size(op.rest, 1)
+                frac = (n - 1) / n if n > 1 else 0.0
+                lb = {"all-reduce": 2 * frac * size,
+                      "reduce-scatter": frac * size * n,
+                      "collective-permute": float(size)}.get(base, frac * size)
+                cl += lb
+                coll_lines.append(f"{base} {op.type_str[:42]} grp={n} "
+                                  f"link={lb:.2e}")
+                continue
+            if oc in _SKIP_BYTES:
+                continue
+            b += _op_bytes(comp, op)
+        return b, cl, coll_lines
+
+    rows = []
+    for name, mult in trips.items():
+        b, cl, lines = comp_bytes(comps[name])
+        if b * mult > 0 or cl * mult > 0:
+            rows.append((b * mult + cl * mult, b * mult, cl * mult, mult,
+                         name, lines))
+    rows.sort(reverse=True)
+    out = ["bytes_total  coll_total  trips  computation"]
+    for tot, b, cl, mult, name, lines in rows[:top]:
+        out.append(f"{b:11.3e} {cl:11.3e} {mult:6.0f}  {name[:70]}")
+        for l in lines[:4]:
+            out.append(f"      {l}")
+    return "\n".join(out)
+
+
+# ops that move only their OUTPUT-sized region (slicing/addressing reads a
+# window of the operand, not the whole buffer)
+_OUTPUT_ONLY = {"dynamic-slice", "gather", "slice", "reshape", "broadcast",
+                "pad", "reverse", "reduce", "reduce-window"}
+
+
+def _op_bytes(comp: "_Computation", op: "_Op") -> float:
+    """HBM traffic model per top-level op.
+
+    Default: output + unique operands.  Slicing ops move only the sliced
+    window (= output); dynamic-update-slice / scatter move ~2x the update
+    region (read-modify-write), NOT the full buffer — the full buffer is
+    aliased in place.  Without this, scan machinery (per-iteration xs
+    slicing and carry updates) looks like it re-reads whole stacked arrays
+    every iteration, inflating the memory term by orders of magnitude.
+    """
+    oc = op.opcode
+    out_b = _bytes_of(op.type_str)
+    args = _split_args(op.rest)
+
+    def arg_bytes(i: int) -> float:
+        if i < len(args):
+            a = args[i].lstrip("%")
+            if a in comp.shapes:
+                return _bytes_of(comp.shapes[a])
+        return 0.0
+
+    if oc in _OUTPUT_ONLY:
+        return out_b
+    if oc == "dynamic-update-slice":
+        return 2.0 * arg_bytes(1)
+    if oc == "scatter":
+        return 2.0 * arg_bytes(2) + arg_bytes(1)
+    if oc == "select-and-scatter":
+        return out_b + arg_bytes(1)
+    b = out_b
+    seen = set()
+    for a in args:
+        a = a.lstrip("%")
+        if a in comp.shapes and a not in seen:
+            seen.add(a)
+            b += _bytes_of(comp.shapes[a])
+    return b
+
+
+def analyze(text: str, default_group: int = 1) -> Metrics:
+    comps = _parse_module(text)
+    entry = None
+    for raw in text.splitlines():
+        if raw.strip().startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(raw.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1]
+
+    memo: Dict[str, Metrics] = {}
+
+    def visit(name: str) -> Metrics:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        met = Metrics()
+        memo[name] = met
+        if comp is None:
+            return met
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                met.flops += _dot_flops(comp, op)
+            elif oc == "convolution":
+                met.flops += _conv_flops(comp, op)
+            base = oc.replace("-start", "")
+            if base in _COLL_OPS and not oc.endswith("-done"):
+                size = _bytes_of(op.type_str)
+                n = _group_size(op.rest, default_group)
+                frac = (n - 1) / n if n > 1 else 0.0
+                if base == "all-reduce":
+                    lb = 2.0 * frac * size
+                elif base == "reduce-scatter":
+                    lb = frac * size * n
+                elif base == "collective-permute":
+                    lb = float(size)
+                else:
+                    lb = frac * size
+                met.coll_link_bytes[base] += lb
+                met.coll_counts[base] += 1
+                met.bytes += _bytes_of(op.type_str)
+            # bytes
+            if oc not in _SKIP_BYTES and base not in _COLL_OPS:
+                met.bytes += _op_bytes(comp, op)
+            # control flow
+            if oc in _CONTROL:
+                scale = 1.0
+                if oc == "while":
+                    tm = _TRIP_RE.search(op.rest)
+                    scale = float(tm.group(1)) if tm else 1.0
+                called = _called_comps(op)
+                if oc == "while":
+                    # body only (condition negligible)
+                    body = [c for c in called if "cond" not in c] or called
+                    for c in body[:1]:
+                        met.add(visit(c), scale)
+                elif oc == "conditional":
+                    branches = [visit(c) for c in called]
+                    if branches:
+                        # upper bound: the most expensive branch
+                        best = max(branches, key=lambda m_: m_.flops + m_.bytes)
+                        met.add(best, 1.0)
+                elif oc == "fusion":
+                    # fusion internals are registers/cache, not HBM traffic;
+                    # the call site's operands+output were counted above
+                    for c in called:
+                        met.add(visit(c), 1.0, include_bytes=False)
+                else:  # call
+                    for c in called:
+                        met.add(visit(c), 1.0)
+        return met
+
+    return visit(entry)

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct input stand-ins per (architecture x shape cell).
+
+``input_specs`` returns abstract arrays only — weak-type-correct, shardable,
+zero device allocation — exactly what ``jax.jit(...).lower()`` needs for the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig, ShapeConfig
+
+# train_4k gradient-accumulation microbatch count per arch (memory knob;
+# per-microbatch rows = global_batch / n_micro)
+TRAIN_MICROBATCHES = {
+    "olmo-1b": 4, "qwen1.5-0.5b": 4, "mamba2-370m": 4, "hubert-xlarge": 4,
+    "yi-6b": 8, "olmoe-1b-7b": 8,
+    "qwen2.5-14b": 16, "pixtral-12b": 16, "zamba2-7b": 16,
+    "kimi-k2-1t-a32b": 32,
+}
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                with_labels: bool = True) -> Dict[str, Any]:
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if cfg.frontend in ("tokens", "patch_embed"):
+        out["tokens"] = sds((batch, seq), jnp.int32)
+        if cfg.frontend == "patch_embed":
+            out["patch_embeds"] = sds(
+                (batch, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    else:  # frame_embed
+        out["frames"] = sds((batch, seq, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        out["labels"] = sds((batch, seq), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype=jnp.bfloat16))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All abstract inputs for the cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"params": params_specs(cfg),
+                "batch": batch_specs(cfg, B, S)}
+    if shape.kind == "prefill":
+        specs = {"params": params_specs(cfg),
+                 "batch": batch_specs(cfg, B, S, with_labels=False)}
+        if not cfg.is_encoder_only:
+            specs["cache"] = cache_specs(cfg, B, S)
+        return specs
+    if shape.kind == "decode":
+        return {"params": params_specs(cfg),
+                "cache": cache_specs(cfg, B, S),
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,8 @@
+"""Architecture zoo: functional JAX models for all assigned families."""
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .transformer import (decode_step, embed_inputs, forward_hidden,
+                          init_cache, init_params, loss_fn, prefill)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "decode_step",
+           "embed_inputs", "forward_hidden", "init_cache", "init_params",
+           "loss_fn", "prefill"]

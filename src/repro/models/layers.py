@@ -1,0 +1,318 @@
+"""Shared neural layers (pure JAX, functional, dict params).
+
+Memory-critical pieces:
+  * ``chunked_attention`` — flash-style online-softmax attention scanned
+    over query/KV chunks so 32k-token prefill never materializes S x S
+    scores (peak tile: q_chunk x kv_chunk per head group);
+  * ``chunked_softmax_xent`` — scans the sequence so 152k-164k vocab logits
+    never exist all at once.
+All softmax/logsumexp math in fp32; matmul inputs in ``compute_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from repro.distributed.hints import BATCH, hint
+
+Params = Dict[str, jnp.ndarray]
+
+_MASK = -1e30
+
+
+def dt(cfg: ModelConfig, kind: str = "compute"):
+    return jnp.dtype(cfg.compute_dtype if kind == "compute" else cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, key) -> Params:
+    if cfg.norm == "nonparam_ln":
+        return {}
+    p = {"scale": jnp.ones((cfg.d_model,), dt(cfg, "param"))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dt(cfg, "param"))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        # nonparam_ln (olmo): no affine parameters
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    assert d % 2 == 0
+    freq = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]   # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dt(cfg, "param")),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dt(cfg, "param")),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dt(cfg, "param")),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    c = dt(cfg)
+    g = jnp.einsum("...d,df->...f", x.astype(c), p["w_gate"].astype(c))
+    u = jnp.einsum("...d,df->...f", x.astype(c), p["w_up"].astype(c))
+    nb = (None,) * (x.ndim - 2)
+    g = hint(g, BATCH, *nb, "model")
+    u = hint(u, BATCH, *nb, "model")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(c) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(c))
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool,
+                      q_positions: jnp.ndarray,
+                      kv_positions: jnp.ndarray,
+                      q_chunk: int, kv_chunk: int) -> jnp.ndarray:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H = KV * G (GQA).
+    q_positions: (Sq,), kv_positions: (Skv,) — used both for causal masking
+    and for cache-validity masking at decode (cache slots with position >
+    the query position are excluded).
+    Scanned over query chunks (outer) and KV chunks (inner): peak live tile
+    is (B, KV, G, q_chunk, kv_chunk) in fp32.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qc = min(q_chunk, Sq)
+    while Sq % qc:
+        qc -= 1
+    kc = min(kv_chunk, Skv)
+    while Skv % kc:
+        kc -= 1
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / math.sqrt(D)
+
+    qr = q.reshape(B, nq, qc, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, KV, G, qc, D); kv-head dim stays on the "model" axis so the
+    # score/output tiles compute with sharded heads (GQA with KV < model
+    # size is padded by GSPMD — see EXPERIMENTS.md §Perf)
+    qr = hint(qr, None, BATCH, "model", None, None, None)
+    kr = k.reshape(B, nk, kc, KV, D).transpose(1, 0, 3, 2, 4)  # (nk,B,KV,kc,D)
+    vr = v.reshape(B, nk, kc, KV, D).transpose(1, 0, 3, 2, 4)
+    kr = hint(kr, None, BATCH, "model", None, None)
+    vr = hint(vr, None, BATCH, "model", None, None)
+    qp = q_positions.reshape(nq, qc)
+    kp = kv_positions.reshape(nk, kc)
+
+    def q_block(carry, xs):
+        qt, qpos = xs          # (B,KV,G,qc,D), (qc,)
+
+        def kv_block(acc, ys):
+            m, l, o = acc
+            kt, vt, kpos = ys  # (B,KV,kc,D), (B,KV,kc,D), (kc,)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qt, kt,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                ok = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(ok[None, None, None], s, _MASK)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vt.dtype), vt,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, KV, G, qc), _MASK, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        o0 = jnp.zeros((B, KV, G, qc, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), (kr, vr, kp))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (qr, qp))
+    # outs: (nq, B, KV, G, qc, D) -> (B, Sq, H, D)
+    outs = hint(outs, None, BATCH, "model", None, None, None)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (with optional KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(H * hd)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dt(cfg, "param")),
+        "wk": (jax.random.normal(ks[1], (d, KV, hd)) * s).astype(dt(cfg, "param")),
+        "wv": (jax.random.normal(ks[2], (d, KV, hd)) * s).astype(dt(cfg, "param")),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * so).astype(dt(cfg, "param")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt(cfg, "param"))
+        p["bk"] = jnp.zeros((KV, hd), dt(cfg, "param"))
+        p["bv"] = jnp.zeros((KV, hd), dt(cfg, "param"))
+    return p
+
+
+def apply_attention(cfg: ModelConfig, p: Params, x: jnp.ndarray, *,
+                    positions: jnp.ndarray,
+                    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """x: (B, S, d).  Training/prefill: cache=None (returns k, v for cache
+    seeding when ``cache_index`` is not None).  Decode: S == 1, ``cache`` =
+    (k_cache, v_cache) of shape (B, S_max, KV, hd), ``cache_index`` = scalar
+    write position; returns updated cache."""
+    c = dt(cfg)
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(c), p["wq"].astype(c))
+    k = jnp.einsum("bsd,dhk->bshk", x.astype(c), p["wk"].astype(c))
+    v = jnp.einsum("bsd,dhk->bshk", x.astype(c), p["wv"].astype(c))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(c)
+        k = k + p["bk"].astype(c)
+        v = v + p["bv"].astype(c)
+    q = hint(q, BATCH, None, "model", None)
+    k = hint(k, BATCH, None, "model", None)
+    v = hint(v, BATCH, None, "model", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.repeat_kv and cache is None and cfg.num_kv_heads < cfg.num_heads:
+        G = cfg.num_heads // cfg.num_kv_heads
+        k = hint(jnp.repeat(k, G, axis=2), BATCH, None, "model", None)
+        v = hint(jnp.repeat(v, G, axis=2), BATCH, None, "model", None)
+
+    new_cache = None
+    if cache is not None:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_index, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_index, 0, 0))
+        new_cache = (kc, vc)
+        k_all, v_all = kc, vc
+        kv_pos = jnp.arange(kc.shape[1], dtype=jnp.int32)
+        out = chunked_attention(q, k_all, v_all, causal=True,
+                                q_positions=positions,
+                                kv_positions=kv_pos,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:
+        out = chunked_attention(q, k, v, causal=cfg.causal,
+                                q_positions=positions, kv_positions=positions,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        if cache_index is not None:  # prefill: hand back k/v to seed a cache
+            new_cache = (k, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embeddings + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {}
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    if cfg.frontend in ("tokens", "patch_embed"):
+        p["tok"] = (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model))
+                    * scale).astype(dt(cfg, "param"))
+    if not cfg.tie_embeddings or cfg.frontend == "frame_embed":
+        p["unembed"] = (jax.random.normal(k2, (cfg.vocab_size, cfg.d_model))
+                        * scale).astype(dt(cfg, "param"))
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dt(cfg))
+
+
+def unembed_table(cfg: ModelConfig, p: Params) -> jnp.ndarray:
+    return p["unembed"] if "unembed" in p else p["tok"]
+
+
+def logits_last(cfg: ModelConfig, p: Params, h: jnp.ndarray) -> jnp.ndarray:
+    """Logits for the last position only (decode / prefill output)."""
+    W = unembed_table(cfg, p)
+    return jnp.einsum("bd,vd->bv", h[:, -1].astype(jnp.float32),
+                      W.astype(jnp.float32))
+
+
+def chunked_softmax_xent(cfg: ModelConfig, p: Params, h: jnp.ndarray,
+                         labels: jnp.ndarray,
+                         mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross entropy; scans sequence chunks so only
+    (B, chunk, V) logits are ever live.  labels: (B, S) int32; positions with
+    label < 0 (or mask == 0) are excluded."""
+    B, S, d = h.shape
+    W = unembed_table(cfg, p)
+    cs = min(cfg.loss_chunk, S)
+    while S % cs:
+        cs -= 1
+    n = S // cs
+    hr = h.reshape(B, n, cs, d).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, cs).transpose(1, 0, 2)
+    if mask is None:
+        mask = (labels >= 0)
+    mr = mask.reshape(B, n, cs).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hc, lc, mc = xs
+        logits = jnp.einsum("bsd,vd->bsv", hc.astype(dt(cfg)),
+                            W.astype(dt(cfg)),
+                            preferred_element_type=jnp.float32)
+        logits = hint(logits, BATCH, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hr, lr, mr))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,100 @@
+"""Capacity-routed top-k Mixture-of-Experts block (kimi-k2, olmoe).
+
+Dispatch is *per batch row* so every routing op (top-k, argsort, capacity
+ranking, scatter/gather) is batched over the data-sharded batch dimension
+and partitions without communication; the only cross-device movement is the
+explicit (batch-sharded -> expert-sharded) boundary around the expert
+matmuls, which lowers to the canonical expert-parallel all-to-all on the
+production mesh.  Tokens beyond a row's per-expert capacity
+ceil(S*K/E * capacity_factor) drop (GShard semantics).
+
+(The first implementation flattened tokens across the global batch before
+sorting; GSPMD had to replicate the sort and all-reduce full (T, d)
+activations per layer — 16.9 TB/device/step on olmoe train_4k.  The
+row-local formulation cut collective traffic ~40x; EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dt
+from repro.distributed.hints import BATCH, hint
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    return {
+        "router": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32),
+        "we_gate": (jax.random.normal(ks[1], (E, d, f)) * s_in).astype(dt(cfg, "param")),
+        "we_up": (jax.random.normal(ks[2], (E, d, f)) * s_in).astype(dt(cfg, "param")),
+        "we_down": (jax.random.normal(ks[3], (E, f, d)) * s_out).astype(dt(cfg, "param")),
+    }
+
+
+def _expert_ffn(cfg: ModelConfig, p: Params, xe: jnp.ndarray) -> jnp.ndarray:
+    """xe: (E, C, d) -> (E, C, d), batched SwiGLU."""
+    c = dt(cfg)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["we_gate"].astype(c))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["we_up"].astype(c))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(c) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["we_down"].astype(c))
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              group_tokens: int = 0) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d).  ``group_tokens`` kept for API compat."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    cap = int(math.ceil(S * K / E * cfg.moe_capacity_factor))
+    c = dt(cfg)
+
+    # --- routing (all shapes carry B in dim 0: batch-sharded, local) -------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    top_vals, top_ids = jax.lax.top_k(logits, K)            # (B, S, K)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    e_flat = top_ids.reshape(B, S * K)
+    t_flat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None], (B, S * K))
+    g_flat = gates.reshape(B, S * K)
+
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    t_sorted = jnp.take_along_axis(t_flat, order, axis=1)
+    g_sorted = jnp.take_along_axis(g_flat, order, axis=1)
+    start = jax.vmap(lambda es: jnp.searchsorted(es, es, side="left"))(e_sorted)
+    pos = jnp.arange(S * K, dtype=jnp.int32)[None] - start
+    keep = pos < cap
+    slot = jnp.where(keep, e_sorted * cap + pos, E * cap)   # OOB drops
+
+    # --- dispatch: row-local scatter into (B, E, cap, d) --------------------
+    gathered = jnp.take_along_axis(x.astype(c), t_sorted[..., None], axis=1)
+    xd = jax.vmap(lambda buf, sl, gx: buf.at[sl].set(gx, mode="drop"))(
+        jnp.zeros((B, E * cap, d), c), slot, gathered)
+    xd = xd.reshape(B, E, cap, d)
+    # batch-sharded -> expert-sharded on the SAME tensor (no transpose in
+    # between): a pure axis swap that GSPMD lowers to the EP all-to-all;
+    # resharding after a transpose degenerates to all-gather (§Perf)
+    xd = hint(xd, None, ("pod", "model"), None, None)
+    xd = xd.transpose(1, 0, 2, 3).reshape(E, B * cap, d)
+
+    ye = _expert_ffn(cfg, p, xd)
+
+    # --- combine: expert-sharded -> batch-sharded, weighted scatter-add ----
+    ye = ye.reshape(E, B, cap, d).transpose(1, 0, 2, 3)
+    ye = hint(ye, BATCH, None, None, None)      # all-to-all back
+    ye = ye.reshape(B, E * cap, d)
+    contrib = jnp.take_along_axis(
+        ye, jnp.minimum(slot, E * cap - 1)[..., None], axis=1)
+    contrib = jnp.where(keep[..., None], contrib, 0).astype(jnp.float32)
+    contrib = contrib * g_sorted[..., None]
+    y = jax.vmap(lambda ts, ct: jnp.zeros((S, d), jnp.float32).at[ts].add(ct))(
+        t_sorted, contrib)
+    return y.astype(x.dtype)

@@ -1,0 +1,204 @@
+"""Mamba2 block via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm: the sequence is split into chunks of Q steps; within a
+chunk the output is a masked quadratic form (attention-like, MXU friendly),
+across chunks a small (H, P, N) state is carried by a scan — O(L) total
+work and memory, which is what qualifies ssm/hybrid archs for the
+``long_500k`` shape.
+
+Recurrence (per head h, state S in R^{P x N}):
+    S_t = exp(dt_t A_h) S_{t-1} + dt_t x_t B_t^T,      y_t = S_t C_t + D_h x_t
+``ssd_reference`` implements it step-by-step (oracle for tests);
+``apply_ssd`` is the chunked equivalent; ``ssd_step`` is the O(1) decode
+update.  B/C use a single group shared across heads (mamba2 default
+ngroups=1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dt
+from repro.distributed.hints import BATCH, hint
+
+_NEG = -1e9
+
+
+def init_ssd(cfg: ModelConfig, key) -> Params:
+    d, di, N, Hs, conv = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                          cfg.ssm_heads, cfg.ssm_conv)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    proj_out = 2 * di + 2 * N + Hs  # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * s).astype(dt(cfg, "param")),
+        "conv_w": (jax.random.normal(ks[1], (conv, di + 2 * N)) * 0.5).astype(dt(cfg, "param")),
+        "conv_b": jnp.zeros((di + 2 * N,), dt(cfg, "param")),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, Hs)).astype(jnp.float32),
+        "D": jnp.ones((Hs,), jnp.float32),
+        "dt_bias": jnp.full((Hs,), -4.6, jnp.float32),  # softplus^-1(~0.01)
+        "norm_scale": jnp.ones((di,), dt(cfg, "param")),
+        "out_proj": (jax.random.normal(ks[3], (di, d)) / math.sqrt(di)).astype(dt(cfg, "param")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, N, Hs = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt_raw = proj[..., di + di + 2 * N:]
+    assert dt_raw.shape[-1] == Hs
+    return z, xBC, dt_raw
+
+
+def _causal_conv(cfg: ModelConfig, p: Params, xBC: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv (kernel cfg.ssm_conv) over (B, L, C)."""
+    conv = cfg.ssm_conv
+    pad = jnp.pad(xBC, ((0, 0), (conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    L = xBC.shape[1]
+    for j in range(conv):
+        out = out + pad[:, j:j + L].astype(jnp.float32) * \
+            p["conv_w"][j].astype(jnp.float32)
+    out = out + p["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xBC.dtype)
+
+
+def _gated_out(cfg: ModelConfig, p: Params, y: jnp.ndarray, z: jnp.ndarray):
+    c = dt(cfg)
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, axis=-1, keepdims=True) + 1e-6)
+    g = g * p["norm_scale"].astype(jnp.float32)
+    return jnp.einsum("...i,id->...d", g.astype(c), p["out_proj"].astype(c))
+
+
+def apply_ssd(cfg: ModelConfig, p: Params, xin: jnp.ndarray,
+              return_state: bool = False):
+    """xin: (B, L, d) -> (B, L, d); L padded internally to a chunk multiple.
+
+    return_state: also return (conv_state, ssd_state) at the final position
+    (prefill -> decode handoff)."""
+    B, L, d = xin.shape
+    di, N, Hs, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    c = dt(cfg)
+    Q = min(cfg.ssm_chunk, L)
+    Lp = (L + Q - 1) // Q * Q
+
+    proj = jnp.einsum("bld,dp->blp", xin.astype(c), p["in_proj"].astype(c))
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(cfg, p, xBC)
+    x = xBC[..., :di]
+    Bm = xBC[..., di:di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                          p["dt_bias"].astype(jnp.float32))   # (B, L, Hs)
+    A = -jnp.exp(p["A_log"])                                   # (Hs,)
+
+    if Lp != L:
+        padw = ((0, 0), (0, Lp - L), (0, 0))
+        x = jnp.pad(x, padw)
+        Bm = jnp.pad(Bm, padw)
+        Cm = jnp.pad(Cm, padw)
+        dtv = jnp.pad(dtv, padw)  # dt=0 -> exp(0)=1 decay, dt x = 0: inert
+    nc = Lp // Q
+    xh = x.reshape(B, nc, Q, Hs, P).astype(jnp.float32)
+    xh = hint(xh, BATCH, None, None, "model", None)
+    dtc = hint(dtv.reshape(B, nc, Q, Hs), BATCH, None, None, "model")
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    delta = dtc * A  # (B, nc, Q, Hs), negative
+    lam = jnp.cumsum(delta, axis=2)          # Λ_t within chunk
+    lam_tot = lam[:, :, -1]                  # (B, nc, Hs)
+
+    # intra-chunk (masked quadratic form)
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)
+    decay = jnp.exp(lam[:, :, :, None, :] - lam[:, :, None, :, :])
+    # (B, nc, Q(t), Q(s), Hs)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    W = CB[..., None] * jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    W = W * dtc[:, :, None, :, :]            # dt_s
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", W, xh)
+
+    # chunk-final states
+    sdecay = jnp.exp(lam_tot[:, :, None, :] - lam) * dtc   # (B, nc, Q, Hs)
+    S_c = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", sdecay, xh, Bc)
+    S_c = hint(S_c, BATCH, None, "model", None, None)
+
+    def chunk_scan(S_prev, ys):
+        S_ci, Cci, lami, lamti = ys
+        # y_inter_t = exp(Lam_t) * C_t . S_prev
+        y_int = jnp.einsum("bhpn,bqn->bqhp", S_prev, Cci) * \
+            jnp.exp(lami)[..., None]
+        S_next = jnp.exp(lamti)[:, :, None, None] * S_prev + S_ci
+        return S_next, y_int
+
+    S0 = jnp.zeros((B, Hs, P, N), jnp.float32)
+    S_fin, y_inter = jax.lax.scan(
+        chunk_scan, S0,
+        (S_c.transpose(1, 0, 2, 3, 4), Cc.transpose(1, 0, 2, 3),
+         lam.transpose(1, 0, 2, 3), lam_tot.transpose(1, 0, 2)))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (B, nc, Q, Hs, P)
+
+    y = y_intra + y_inter
+    y = y + p["D"][None, None, None, :, None] * xh
+    y = y.reshape(B, Lp, di)[:, :L]
+    out = _gated_out(cfg, p, y.astype(c), z)
+    if not return_state:
+        return out
+    return out, (_conv_tail(cfg, p, xin, proj), S_fin)
+
+
+def _conv_tail(cfg: ModelConfig, p: Params, xin, proj) -> jnp.ndarray:
+    """Last (conv-1) pre-conv xBC rows, the decode-time conv state."""
+    _, xBC, _ = _split_proj(cfg, proj)
+    k = cfg.ssm_conv - 1
+    return xBC[:, -k:, :]
+
+
+def ssd_step(cfg: ModelConfig, p: Params, xin: jnp.ndarray,
+             conv_state: jnp.ndarray, S: jnp.ndarray,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  xin: (B, 1, d); conv_state: (B, conv-1, di+2N)
+    pre-activation window; S: (B, Hs, P, N).  Returns (y, conv_state', S')."""
+    B = xin.shape[0]
+    di, N, Hs, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    c = dt(cfg)
+    proj = jnp.einsum("bld,dp->blp", xin.astype(c), p["in_proj"].astype(c))
+    z, xBC_new, dt_raw = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv_state, xBC_new], axis=1)  # (B, conv, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+    x = conv_out[:, :di].reshape(B, Hs, P)
+    Bv = conv_out[:, di:di + N]
+    Cv = conv_out[:, di + N:]
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                          p["dt_bias"].astype(jnp.float32))   # (B, Hs)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dtv * A)                                       # (B, Hs)
+    S_new = a[:, :, None, None] * S + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, x, Bv.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cv.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * x
+    y = y.reshape(B, 1, di)
+    out = _gated_out(cfg, p, y.astype(c), z)
+    return out, window[:, 1:], S_new
+
+
+def ssd_reference(cfg: ModelConfig, p: Params, xin: jnp.ndarray) -> jnp.ndarray:
+    """Sequential-recurrence oracle (slow, tests only)."""
+    B, L, d = xin.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    conv_state = jnp.zeros((B, cfg.ssm_conv - 1, di + 2 * N), dt(cfg))
+    S = jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim, N), jnp.float32)
+    outs = []
+    for t in range(L):
+        y, conv_state, S = ssd_step(cfg, p, xin[:, t:t + 1], conv_state, S)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)

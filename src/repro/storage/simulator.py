@@ -1,0 +1,178 @@
+"""Repair-round simulation (paper Section VI + Appendix A Fig. 10).
+
+Two levels of fidelity:
+
+* ``compare_schemes`` — planning-level Monte Carlo: per round, sample an
+  overlay, plan with each scheme, record regeneration time and total repair
+  traffic normalized against STAR on the *same* network (Figs 6-8).
+* ``RlncSimulator`` — data-plane simulation with real GF coding vectors:
+  executes plans block-by-block (provider encode, interior relay, newcomer
+  regenerate) and measures the probability that k random nodes can still
+  reconstruct the file (Fig. 10, RCTREE's MDS collapse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.coding import GF, GF8, RLNC, CodedBlocks
+from repro.core import (CodeParams, OverlayNetwork, RepairPlan, plan_time,
+                        SCHEMES)
+from .capacities import CapSampler
+
+
+# ---------------------------------------------------------------------------
+# Planning-level Monte Carlo (Figs 6-8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SchemeStats:
+    scheme: str
+    mean_time: float
+    mean_norm_time: float      # vs STAR on the same sampled network
+    mean_traffic: float
+    mean_norm_traffic: float
+    plan_seconds: float        # mean planner wall time
+
+
+def compare_schemes(params: CodeParams, sampler: CapSampler,
+                    schemes: Sequence[str], trials: int,
+                    seed: int = 0) -> Dict[str, SchemeStats]:
+    import time as _time
+
+    rng = random.Random(seed)
+    acc = {s: [0.0, 0.0, 0.0, 0.0, 0.0] for s in schemes}
+    for _ in range(trials):
+        net = sampler(rng, params.d)
+        base = SCHEMES["star"](net, params)
+        for s in schemes:
+            t0 = _time.perf_counter()
+            plan = SCHEMES[s](net, params)
+            dt = _time.perf_counter() - t0
+            a = acc[s]
+            a[0] += plan.time
+            a[1] += plan.time / base.time
+            a[2] += plan.total_traffic
+            a[3] += plan.total_traffic / base.total_traffic
+            a[4] += dt
+    return {
+        s: SchemeStats(s, a[0] / trials, a[1] / trials, a[2] / trials,
+                       a[3] / trials, a[4] / trials)
+        for s, a in acc.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Data-plane simulation with real coding vectors (Fig. 10)
+# ---------------------------------------------------------------------------
+
+class RlncSimulator:
+    """Distributed storage system with actual RLNC state per node."""
+
+    def __init__(self, params: CodeParams, field: GF = GF8,
+                 block_bytes: int = 4, seed: int = 0,
+                 matmul: Optional[Callable] = None):
+        if abs(params.M - round(params.M)) > 1e-9 or \
+           abs(params.alpha - round(params.alpha)) > 1e-9:
+            raise ValueError("data-plane simulation needs integral M, alpha")
+        self.params = params
+        self.field = field
+        self.rl = RLNC(field, matmul=matmul)
+        self.np_rng = np.random.default_rng(seed)
+        self.rng = random.Random(seed + 1)
+        M, n, alpha = int(params.M), params.n, int(round(params.alpha))
+        self.file_blocks = field.random((M, block_bytes), self.np_rng)
+        self.nodes: Dict[int, CodedBlocks] = dict(
+            enumerate(self.rl.distribute(self.file_blocks, n, alpha,
+                                         self.np_rng)))
+
+    def execute_plan(self, plan: RepairPlan, failed: int,
+                     provider_ids: Sequence[int]) -> None:
+        """Replace ``failed`` by running ``plan`` on the real coded state.
+
+        Fractional betas/flows are ceil-rounded (Section III-C).  For the
+        broken RCTREE baseline, flows are the plan's fixed per-edge beta,
+        which is what destroys information at interior nodes.
+        """
+        alpha = int(round(self.params.alpha))
+        idmap = {i: pid for i, pid in enumerate(provider_ids, start=1)}
+        children: Dict[int, List[int]] = {}
+        for u, p in plan.parent.items():
+            children.setdefault(p, []).append(u)
+
+        def produce(u: int) -> CodedBlocks:
+            """Blocks node u sends to its tree parent."""
+            own_quota = plan.betas[u - 1]
+            recv: Optional[CodedBlocks] = None
+            for ch in children.get(u, []):
+                part = produce(ch)
+                recv = part if recv is None else recv.concat(part)
+            send_quota = int(math.ceil(plan.flows[(u, plan.parent[u])] - 1e-9))
+            own = self.rl.encode(self.nodes[idmap[u]],
+                                 int(math.ceil(own_quota - 1e-9)), self.np_rng)
+            if recv is None:
+                out = own
+            else:
+                pool = recv.concat(own)
+                if pool.num > send_quota:
+                    out = self.rl.relay(recv, own, send_quota, self.np_rng)
+                else:
+                    out = pool
+            # cap at the plan's edge flow (RCTREE keeps this below alpha)
+            if out.num > send_quota:
+                out = CodedBlocks(out.vectors[:send_quota],
+                                  out.payload[:send_quota])
+            return out
+
+        received: Optional[CodedBlocks] = None
+        for r in children.get(0, []):
+            part = produce(r)
+            received = part if received is None else received.concat(part)
+        assert received is not None
+        self.nodes[failed] = self.rl.regenerate(received, alpha, self.np_rng)
+
+    def repair_round(self, scheme: str, sampler: CapSampler,
+                     failed: Optional[int] = None) -> RepairPlan:
+        ids = sorted(self.nodes)
+        if failed is None:
+            failed = self.rng.choice(ids)
+        survivors = [i for i in ids if i != failed]
+        providers = self.rng.sample(survivors, self.params.d)
+        net = sampler(self.rng, self.params.d)
+        plan = SCHEMES[scheme](net, self.params)
+        self.execute_plan(plan, failed, providers)
+        return plan
+
+    def reconstruction_probability(self, samples: int = 0) -> float:
+        """Fraction of k-subsets (all, or ``samples`` random ones) whose
+        combined coding vectors have rank >= M."""
+        ids = sorted(self.nodes)
+        k, M = self.params.k, int(self.params.M)
+        combos = list(itertools.combinations(ids, k))
+        if samples and samples < len(combos):
+            combos = self.rng.sample(combos, samples)
+        ok = 0
+        for combo in combos:
+            if self.rl.can_reconstruct([self.nodes[i] for i in combo], M):
+                ok += 1
+        return ok / len(combos)
+
+
+def reconstruction_vs_rounds(params: CodeParams, scheme: str,
+                             sampler: CapSampler, rounds: int, trials: int,
+                             field: GF = GF8, seed: int = 0,
+                             subset_samples: int = 0) -> List[float]:
+    """Fig. 10: mean reconstruction probability after each repair round."""
+    probs = [0.0] * (rounds + 1)
+    for tr in range(trials):
+        sim = RlncSimulator(params, field=field, seed=seed + 1000 * tr)
+        probs[0] += sim.reconstruction_probability(subset_samples)
+        for r in range(1, rounds + 1):
+            sim.repair_round(scheme, sampler)
+            probs[r] += sim.reconstruction_probability(subset_samples)
+    return [p / trials for p in probs]

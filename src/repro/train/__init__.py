@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, step builders, loop, data pipeline."""
+from .optimizer import AdamWConfig, OptimizerConfig, OptState, init_opt, \
+    apply_updates, global_norm
+from .step import make_decode_step, make_prefill_step, make_train_step
+from .data import DataConfig, SyntheticLM
+from .loop import LoopConfig, TrainResult, train

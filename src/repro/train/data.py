@@ -1,0 +1,74 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, host_shard) — after a
+failure/restart the pipeline replays exactly, so erasure-coded checkpoint
+restores resume bit-identical training (no data-loader state to persist).
+The token stream is a stationary Markov chain (learnable structure: loss
+decreases measurably within a few hundred steps, unlike uniform noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    batch: int = 8
+    seq_len: int = 128
+    markov_order: float = 0.9   # prob of structured transition vs uniform
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, model_cfg: ModelConfig):
+        self.cfg = cfg
+        self.mc = model_cfg
+        v = model_cfg.vocab_size
+        rng = np.random.default_rng(cfg.seed)
+        # sparse deterministic successor table: v_next = perm[v] usually
+        self.perm = jnp.asarray(rng.permutation(v), jnp.int32)
+
+    def batch_at(self, step: int) -> Dict[str, Any]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), step)
+        B, S, V = self.cfg.batch, self.cfg.seq_len, self.mc.vocab_size
+        k1, k2, k3 = jax.random.split(key, 3)
+        start = jax.random.randint(k1, (B, 1), 0, V)
+        noise = jax.random.randint(k2, (B, S + 1), 0, V)
+        use_chain = jax.random.bernoulli(k3, self.cfg.markov_order,
+                                         (B, S + 1))
+
+        def step_fn(tok, xs):
+            nz, uc = xs
+            nxt = jnp.where(uc, self.perm[tok], nz)
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(step_fn, start[:, 0],
+                              (noise.T, use_chain.T))
+        seq = seq.T  # (B, S+1)
+        batch: Dict[str, Any] = {"tokens": seq[:, :S],
+                                 "labels": seq[:, 1:S + 1]}
+        if self.mc.frontend == "patch_embed":
+            n = self.mc.num_frontend_tokens
+            pk = jax.random.fold_in(key, 7)
+            batch["patch_embeds"] = jax.random.normal(
+                pk, (B, n, self.mc.d_model), jnp.float32)
+            batch["labels"] = batch["labels"].at[:, :n].set(-1)
+        if self.mc.frontend == "frame_embed":
+            fk = jax.random.fold_in(key, 9)
+            batch = {"frames": jax.random.normal(
+                fk, (B, S, self.mc.d_model), jnp.float32),
+                "labels": batch["labels"]}
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

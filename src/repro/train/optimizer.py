@@ -1,0 +1,147 @@
+"""Optimizers: fused AdamW and factored-second-moment Adafactor.
+
+Dtype policy is part of the memory design (DESIGN.md §7):
+  * default — AdamW, fp32 m/v, fp32 grad accumulation;
+  * trillion-param MoE (kimi-k2) — Adafactor (factored v: O(r + c) state per
+    (r, c) matrix instead of O(r*c)), no momentum, bf16 gradient
+    accumulation; without this the expert tables alone exceed v5e HBM
+    (1.03e12 fp32 grads = 16 GB/device at 256 shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    mode: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    grad_dtype: str = "float32"  # gradient-accumulator dtype
+    momentum: bool = True        # adafactor: keep first moment?
+
+
+# backwards-compatible alias used across the launch stack
+AdamWConfig = OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any          # first moment (or () when disabled)
+    v: Any          # adamw: full second moment; adafactor: (v_row, v_col)
+
+
+AdamWState = OptState
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init_opt(cfg: OptimizerConfig, params: Any) -> OptState:
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def zeros_like(p):
+        return jnp.zeros(p.shape, sdt)
+
+    if cfg.mode == "adamw":
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree_util.tree_map(zeros_like, params),
+                        v=jax.tree_util.tree_map(zeros_like, params))
+
+    def fac(p):
+        if not _factored(p):
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+
+    m = (jax.tree_util.tree_map(zeros_like, params) if cfg.momentum else ())
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=m,
+                    v=jax.tree_util.tree_map(fac, params))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _adamw_update(cfg, params, grads, state, lr, clip):
+    t = (state.step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        delta = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(sdt), v32.astype(sdt))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), OptState(step=state.step + 1, m=pick(1), v=pick(2))
+
+
+def _adafactor_update(cfg, params, grads, state, lr, clip):
+    sdt = jnp.dtype(cfg.state_dtype)
+    d = 1.0 - cfg.b2  # decay toward running means
+
+    def upd_v(g32, v):
+        if "full" in v:
+            v_new = {"full": cfg.b2 * v["full"] + d * g32 * g32}
+            rms = jnp.sqrt(v_new["full"]) + cfg.eps
+            return v_new, g32 / rms
+        row = cfg.b2 * v["row"] + d * jnp.mean(g32 * g32, axis=-1)
+        col = cfg.b2 * v["col"] + d * jnp.mean(g32 * g32, axis=-2)
+        # rank-1 reconstruction of the second moment
+        denom = jnp.sqrt(
+            row[..., None] * col[..., None, :]
+            / (jnp.mean(row, axis=-1)[..., None, None] + 1e-30)) + cfg.eps
+        return {"row": row, "col": col}, g32 / denom
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_m = treedef.flatten_up_to(state.m) if cfg.momentum else [None] * len(flat_p)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, v, m in zip(flat_p, flat_g, flat_v, flat_m):
+        g32 = g.astype(jnp.float32) * clip
+        v2, u = upd_v(g32, v)
+        if cfg.momentum:
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+            u = m32
+            new_m.append(m32.astype(sdt))
+        delta = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+        new_v.append(v2)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            OptState(step=state.step + 1,
+                     m=(jax.tree_util.tree_unflatten(treedef, new_m)
+                        if cfg.momentum else ()),
+                     v=jax.tree_util.tree_unflatten(treedef, new_v)))
+
+
+def apply_updates(cfg: OptimizerConfig, params: Any, grads: Any,
+                  state: OptState, lr_scale: "jnp.ndarray | float" = 1.0
+                  ) -> Tuple[Any, OptState]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = cfg.lr * lr_scale
+    if cfg.mode == "adamw":
+        return _adamw_update(cfg, params, grads, state, lr, clip)
+    return _adafactor_update(cfg, params, grads, state, lr, clip)

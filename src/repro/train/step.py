@@ -1,0 +1,122 @@
+"""Train / serve step builders (the functions the launcher jits and lowers).
+
+``make_train_step``: gradient-accumulation microbatching (scan over
+microbatches, fp32 accumulators), fused AdamW, grad-norm metrics.  The
+microbatch count is a per-(arch, shape) memory knob — activations live only
+for one microbatch (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn as model_loss
+from repro.models import decode_step as model_decode
+from repro.models import prefill as model_prefill
+from repro.models.config import ModelConfig
+from .optimizer import AdamWConfig, AdamWState, apply_updates, global_norm
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n_micro: int):
+    def r(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} not divisible by {n_micro} microbatches"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree_util.tree_map(r, batch)
+
+
+def _drop_axis(ns, axis: str):
+    """NamedSharding minus one mesh axis (for loop-hoisted weight gathers)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def fix(e):
+        if e == axis:
+            return None
+        if isinstance(e, tuple):
+            kept = tuple(a for a in e if a != axis)
+            return kept if kept else None
+        return e
+
+    return NamedSharding(ns.mesh, P(*[fix(e) for e in ns.spec]))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, n_micro: int = 1,
+                    grad_shardings: Any = None,
+                    gather_weights_once: bool = False) -> Callable:
+    """``grad_shardings``: param-tree of NamedSharding — constrains the fp32
+    gradient accumulator to the parameter layout (without it GSPMD may
+    replicate a param-sized fp32 buffer on every device).
+
+    ``gather_weights_once``: hoist the ZeRO-3 weight all-gather out of the
+    gradient-accumulation loop — one bf16 gather per *step* instead of one
+    per (layer x microbatch); per-micro grads still reduce-scatter back to
+    the 2-D layout so the accumulator stays small (EXPERIMENTS.md §Perf)."""
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        compute_params = params
+        acc_shardings = grad_shardings
+        if gather_weights_once and grad_shardings is not None:
+            gathered_sh = jax.tree_util.tree_map(
+                lambda ns: _drop_axis(ns, "data"), grad_shardings)
+            compute_params = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, params, gathered_sh)
+            # accumulate micro-grads in the gathered (model-only) layout:
+            # per-device partial sums need NO collective per microbatch; one
+            # reduce-scatter back to the 2-D layout happens after the loop
+            acc_shardings = gathered_sh
+        micro = _split_microbatches(batch, n_micro)
+
+        gdt = jnp.dtype(opt_cfg.grad_dtype)
+
+        def _acc_constrain(tree):
+            if acc_shardings is None:
+                return tree
+            return jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, tree, acc_shardings)
+
+        def one(acc, mb):
+            loss, grads = jax.value_and_grad(
+                lambda p: model_loss(cfg, p, mb))(compute_params)
+            # shard each micro-grad like its accumulator BEFORE accumulating:
+            # without this GSPMD may all-gather full fp32 tensors per micro
+            grads = _acc_constrain(grads)
+            g_acc, l_acc = acc
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: (a + g.astype(gdt)).astype(gdt), g_acc, grads)
+            return (_acc_constrain(g_acc), l_acc + loss), None
+
+        g0 = _acc_constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, gdt), params))
+        (g_sum, loss_sum), _ = jax.lax.scan(one, (g0, jnp.float32(0)), micro)
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) / n_micro, g_sum)
+        # reshard (reduce over data) to the parameter layout for the update
+        grads = _constrain(grads)
+        new_params, new_opt = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss_sum / n_micro,
+                   "grad_norm": global_norm(grads),
+                   "step": new_opt.step}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model_prefill(cfg, params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return model_decode(cfg, params, cache, tokens, pos)
+    return decode_step

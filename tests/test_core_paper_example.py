@@ -1,0 +1,119 @@
+"""Reproduces the paper's Fig. 1 worked example exactly.
+
+Parameters: n=5, k=2, d=4, M=480 Mb, alpha = M/k = 240 Mb,
+beta = alpha/(d-k+1) = 80 Mb.  Direct capacities (Mbps):
+v1->v0 = 70, v2->v0 = 50, v3->v0 = 20, v4->v0 = 10; inter-provider link
+v4->v1 = 35 (the one the tree uses); all other inter-provider links low
+(5 Mbps, the bottom of the paper's 5-70 Mbps range).
+
+Expected regeneration times (paper Section I text):
+  STAR = 8 s, FR = 3 s, TR = 4 s, FTR = 2.67 s.
+(The Fig. 1 caption transposes FR/TR; the per-scheme derivations in the
+text give FR = 3 s and TR = 4 s, which is what we check.)
+"""
+import math
+
+import pytest
+
+from repro.core import (CodeParams, InfoFlowGraph, OverlayNetwork,
+                        event_from_plan, fr_closed_form_msr, plan_fr,
+                        plan_ftr, plan_rctree, plan_star, plan_tr)
+
+P = CodeParams.msr(n=5, k=2, d=4, M=480.0)
+
+
+def fig1_network() -> OverlayNetwork:
+    net = OverlayNetwork.star_only([70.0, 50.0, 20.0, 10.0], cross=5.0)
+    net.cap[4][1] = 35.0  # v4 -> v1
+    return net
+
+
+def test_params():
+    assert P.alpha == 240.0
+    assert P.beta == pytest.approx(80.0)
+
+
+def test_star_8s():
+    plan = plan_star(fig1_network(), P)
+    plan.validate(fig1_network())
+    assert plan.time == pytest.approx(8.0)
+    assert plan.total_traffic == pytest.approx(4 * 80.0)
+
+
+def test_fr_3s_closed_form():
+    net = fig1_network()
+    betas = fr_closed_form_msr(net.direct_caps(), P)
+    # text: v1..v4 generate 150, 150, 60, 30
+    assert betas == pytest.approx([150.0, 150.0, 60.0, 30.0])
+    plan = plan_fr(net, P)
+    plan.validate(net)
+    assert plan.time == pytest.approx(3.0, rel=1e-6)
+
+
+def test_tr_4s_and_tree_shape():
+    net = fig1_network()
+    plan = plan_tr(net, P)
+    plan.validate(net)
+    assert plan.time == pytest.approx(4.0, rel=1e-6)
+    # Fig. 1(d): v4 relays through v1; v1, v2, v3 direct to newcomer
+    assert plan.parent == {1: 0, 2: 0, 3: 0, 4: 1}
+    # Theorem-3 flow on (v1, v0) is 2*beta
+    assert plan.flows[(1, 0)] == pytest.approx(160.0)
+
+
+def test_ftr_2_67s():
+    net = fig1_network()
+    plan = plan_ftr(net, P)
+    plan.validate(net)
+    assert plan.time == pytest.approx(8.0 / 3.0, rel=1e-4)
+    # paper's beta = (133.33, 133.33, 53.33, 53.33); our LP reaches the same
+    # optimal time with a cheaper vector (secondary traffic minimization), so
+    # check the optimality structure instead of the particular vertex:
+    from repro.core import sigma
+    assert sigma(1, plan.betas, P.k, P.d) == pytest.approx(240.0, rel=1e-3)
+    assert plan.parent == {1: 0, 2: 0, 3: 0, 4: 1}  # same tree as Fig. 1(e)
+    # paper's vector is also feasible on this tree at the same time
+    from repro.core import tree_flows
+    paper_betas = [400 / 3, 400 / 3, 160 / 3, 160 / 3]
+    fl = tree_flows(plan.parent, paper_betas, P.alpha)
+    t_paper = max(fl[e] / net.c(*e) for e in fl)
+    assert t_paper == pytest.approx(8.0 / 3.0, rel=1e-6)
+    assert plan.total_traffic <= sum(fl.values()) + 1e-6
+
+
+def test_scheme_ordering():
+    """FTR <= min(FR, TR) <= STAR on this (and by design any) network."""
+    net = fig1_network()
+    t = {s.scheme: s.time for s in (plan_star(net, P), plan_fr(net, P),
+                                    plan_tr(net, P), plan_ftr(net, P))}
+    assert t["ftr"] <= t["fr"] + 1e-9
+    assert t["ftr"] <= t["tr"] + 1e-9
+    assert t["fr"] <= t["star"] + 1e-9
+    assert t["tr"] <= t["star"] + 1e-9
+
+
+def test_mds_preserved_by_all_four_schemes():
+    """Single-repair min-cut check for star/fr/tr/ftr on the Fig. 1 network."""
+    for planner in (plan_star, plan_fr, plan_tr, plan_ftr):
+        net = fig1_network()
+        plan = planner(net, P)
+        g = InfoFlowGraph(P, initial_nodes=[1, 2, 3, 4, 5])
+        # node 5 fails; nodes 1..4 are providers; newcomer gets id 6
+        g.fail_and_repair(5, event_from_plan(plan, newcomer_id=6,
+                                             provider_ids=[1, 2, 3, 4]))
+        worst, flow = g.worst_collector()
+        assert flow >= P.M - 1e-6, (planner.__name__, worst, flow)
+
+
+def test_rctree_violates_mds_appendix_a():
+    """Appendix A: RCTREE's min-cut through {v3, newcomer} is 2*beta + alpha
+    = 400 Mb < M = 480 Mb."""
+    net = fig1_network()
+    plan = plan_rctree(net, P)
+    g = InfoFlowGraph(P, initial_nodes=[1, 2, 3, 4, 5])
+    g.fail_and_repair(5, event_from_plan(plan, newcomer_id=6,
+                                         provider_ids=[1, 2, 3, 4]))
+    worst, flow = g.worst_collector()
+    assert flow < P.M - 1e-6, "RCTREE should break the MDS property"
+    # the paper's specific counterexample value (tree has one relay edge)
+    assert flow == pytest.approx(2 * 80.0 + 240.0)

@@ -1,0 +1,210 @@
+"""Property-based tests (hypothesis) for the regeneration planners.
+
+System invariants checked on random heterogeneous networks:
+  * every scheme's plan is structurally valid (tree, Theorem-3/5 flows);
+  * multi-round repair histories keep the MDS property (min-cut >= M) for
+    STAR/FR/TR/FTR — and the scheme ordering FTR <= min(FR, TR) <= STAR;
+  * FR closed form at MSR matches the bisection LP optimum;
+  * heuristics are lower-bounded by the exact brute-force ORT optimum;
+  * fractional-beta ceil-rounding keeps the region constraints (III-C).
+"""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CodeParams, InfoFlowGraph, OverlayNetwork,
+                        event_from_plan, fr_closed_form_msr, heuristic_region,
+                        msr_region, plan_fr, plan_ftr, plan_ort_uniform,
+                        plan_shah, plan_star, plan_time, plan_tr, sigma,
+                        theorem6_example, uniform_beta)
+from repro.core.lp import minmax_time_star
+from repro.core.tree import tree_time_uniform
+
+
+def rand_net(rng: random.Random, d: int, lo=10.0, hi=120.0) -> OverlayNetwork:
+    cap = [[0.0] * (d + 1) for _ in range(d + 1)]
+    for u in range(d + 1):
+        for v in range(d + 1):
+            if u != v:
+                cap[u][v] = rng.uniform(lo, hi)
+    return OverlayNetwork(cap)
+
+
+nets = st.builds(
+    lambda seed, d: (rand_net(random.Random(seed), d), d),
+    st.integers(0, 10_000), st.integers(4, 7))
+
+
+@settings(max_examples=20, deadline=None)
+@given(nets, st.integers(2, 4))
+def test_single_round_all_schemes_valid_and_ordered(net_d, k):
+    net, d = net_d
+    if k > d - 1:
+        k = d - 1
+    p = CodeParams.msr(n=d + 2, k=k, d=d, M=float(k * (d - k + 1) * 12))
+    s, f, t, ft = plan_star(net, p), plan_fr(net, p), plan_tr(net, p), plan_ftr(net, p)
+    for pl in (s, f, t, ft):
+        pl.validate(net)
+        assert pl.time < math.inf
+    assert f.time <= s.time * (1 + 1e-9)
+    assert t.time <= s.time * (1 + 1e-9)
+    assert ft.time <= min(f.time, t.time) * (1 + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 3), st.integers(1, 3))
+def test_multi_round_mds(seed, k, rounds):
+    """Cascading repairs (the Lemma-2 worst case) keep min-cut >= M."""
+    rng = random.Random(seed)
+    d = rng.randint(k + 1, 5)
+    n = d + 2
+    p = CodeParams.msr(n=n, k=k, d=d, M=float(k * (d - k + 1) * 6))
+    g = InfoFlowGraph(p, initial_nodes=list(range(1, n + 1)))
+    planner = rng.choice([plan_star, plan_fr, plan_tr, plan_ftr])
+    next_id = n + 1
+    for _ in range(rounds):
+        failed = rng.choice(g.live)
+        providers = rng.sample([x for x in g.live if x != failed], d)
+        net = rand_net(rng, d)
+        plan = planner(net, p)
+        g.fail_and_repair(failed, event_from_plan(plan, next_id, providers))
+        next_id += 1
+    worst, flow = g.worst_collector()
+    assert flow >= p.M - 1e-6, (planner.__name__, worst, flow, p)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5))
+def test_fr_closed_form_matches_lp(seed, k):
+    rng = random.Random(seed)
+    d = rng.randint(k, 8)
+    p = CodeParams.msr(n=d + 2, k=k, d=d, M=float(k * (d - k + 1) * 10))
+    caps = [rng.uniform(1.0, 120.0) for _ in range(d)]
+    betas = fr_closed_form_msr(caps, p)
+    t_closed = max(b / c for b, c in zip(betas, caps))
+    t_lp = minmax_time_star(caps, msr_region(p), p.alpha)
+    assert t_closed == pytest.approx(t_lp, rel=1e-6)
+    assert sigma(1, betas, k, d) == pytest.approx(p.M / k, rel=1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_tr_heuristic_vs_exact_ort(seed):
+    rng = random.Random(seed)
+    d = rng.randint(3, 5)
+    k = rng.randint(2, d - 1)
+    p = CodeParams.msr(n=d + 2, k=k, d=d, M=float(k * (d - k + 1) * 4))
+    net = rand_net(rng, d)
+    heur = plan_tr(net, p)
+    exact = plan_ort_uniform(net, p)
+    assert heur.time >= exact.time * (1 - 1e-9)
+    # the heuristic should be reasonably close on tiny instances
+    assert heur.time <= exact.time * 2.0 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_non_msr_heuristic_region_and_rounding(seed):
+    """alpha > M/k: FR beats STAR, uniform point is in the region, and
+    ceil-rounding the LP solution stays in the region (Section III-C)."""
+    rng = random.Random(seed)
+    k = rng.randint(2, 4)
+    d = rng.randint(k + 1, 7)
+    M = float(k * (d - k + 1) * 20)
+    alpha_msr = M / k
+    alpha = alpha_msr * rng.uniform(1.05, 1.8)
+    p = CodeParams(n=d + 2, k=k, d=d, M=M, alpha=alpha)
+    region = heuristic_region(p)
+    assert region.contains([p.beta] * d, tol=1e-9)
+    assert region.is_feasible(p)
+    net = rand_net(rng, d)
+    fr = plan_fr(net, p)
+    fr.validate(net)
+    st_ = plan_star(net, p)
+    assert fr.time <= st_.time * (1 + 1e-9)
+    # integral blocks: rounding up each beta_i keeps every sigma_j threshold
+    rounded = [math.ceil(b - 1e-9) for b in fr.betas]
+    assert region.contains(rounded, tol=1e-9)
+
+
+def test_theorem6_incomparable_regions():
+    p, d1, d2 = theorem6_example()
+    assert d1.is_feasible(p) and d2.is_feasible(p)
+    b1, b2 = [0, 1, 4, 4], [0, 2, 2, 2]
+    assert d1.contains(b1) and not d2.contains(b1)
+    assert d2.contains(b2) and not d1.contains(b2)
+    # the paper's capacity settings that flip the preference
+    for caps, better in (((1, 1, 4, 4), b1), ((1, 2, 2, 2), b2)):
+        t1 = max(b / c for b, c in zip(sorted(b1), sorted(caps)))
+        t2 = max(b / c for b, c in zip(sorted(b2), sorted(caps)))
+        tb = max(b / c for b, c in zip(sorted(better), sorted(caps)))
+        assert tb == pytest.approx(min(t1, t2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 4))
+def test_shah_baseline_dominated_by_fr(seed, k):
+    """FR's region subsumes the (beta_max, gamma) region of [6], so FR is
+    at least as fast (Section VII comparison)."""
+    rng = random.Random(seed)
+    d = rng.randint(k + 1, 8)
+    p = CodeParams.msr(n=d + 2, k=k, d=d, M=float(k * (d - k + 1) * 10))
+    net = rand_net(rng, d)
+    fr, sh = plan_fr(net, p), plan_shah(net, p)
+    sh.validate(net)
+    assert fr.time <= sh.time * (1 + 1e-6)
+    # Shah plans must also keep MDS (single round)
+    g = InfoFlowGraph(p, initial_nodes=list(range(1, d + 3)))
+    g.fail_and_repair(d + 2, event_from_plan(sh, d + 3, list(range(1, d + 1))))
+    assert g.worst_collector()[1] >= p.M - 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_waterfill_oracle_matches_lp(seed):
+    """The water-fill (leximin) oracle and the scipy LP must agree on
+    fixed-tree feasibility at any time t (exactness of the fast oracle)."""
+    from repro.core.lp import tree_feasible_at_time, _subtree_sets
+    rng = random.Random(seed)
+    k = rng.randint(2, 4)
+    d = rng.randint(k + 1, 8)
+    msr = rng.random() < 0.5
+    M = float(k * (d - k + 1) * 12)
+    alpha = M / k if msr else M / k * rng.uniform(1.05, 1.6)
+    p = CodeParams(n=d + 2, k=k, d=d, M=M, alpha=alpha)
+    region = msr_region(p) if msr else heuristic_region(p)
+    # random rooted tree
+    parent = {}
+    order = list(range(1, d + 1))
+    rng.shuffle(order)
+    placed = [0]
+    for u in order:
+        parent[u] = rng.choice(placed)
+        placed.append(u)
+    caps = {(u, pa): rng.uniform(1.0, 120.0) for u, pa in parent.items()}
+    for t_mult in (0.3, 0.7, 1.0, 1.5, 3.0):
+        t = t_mult * p.beta / max(caps.values())
+        wf = tree_feasible_at_time(t, parent, caps, region, p.alpha)
+        lp_w = tree_feasible_at_time(t, parent, caps, region, p.alpha,
+                                     use_lp=True)
+        assert (wf is None) == (lp_w is None), (
+            f"oracle disagreement at t={t}: wf={wf} lp={lp_w}")
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_uniform_beta_consistency(seed):
+    """uniform_beta inverts the storage/bandwidth tradeoff equation."""
+    rng = random.Random(seed)
+    k = rng.randint(1, 6)
+    d = rng.randint(k, 10)
+    M = rng.uniform(10.0, 1000.0)
+    # alpha between MSR and MBR
+    a_msr = M / k
+    a_mbr = 2.0 * M * d / (k * (2 * d - k + 1))
+    alpha = a_msr + (a_mbr - a_msr) * rng.random()
+    b = uniform_beta(M, k, d, alpha)
+    total = sum(min((d - k + j) * b, alpha) for j in range(1, k + 1))
+    assert total == pytest.approx(M, rel=1e-9)

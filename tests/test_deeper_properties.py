@@ -1,0 +1,125 @@
+"""Deeper system invariants (budget-extension coverage).
+
+* FTR degenerates exactly to FR on star-only overlays (no useful
+  inter-provider links) — the i=0 candidate of Algorithm 2;
+* mixed-scheme multi-round repair histories keep MDS (rounds may use
+  different planners — the real fleet case);
+* executed tree plans with ceil-rounded integral flows keep MDS on the
+  RLNC data plane;
+* GF(2^16) linear algebra round-trips (the paper's Fig.-10 field).
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CodeParams, InfoFlowGraph, OverlayNetwork,
+                        event_from_plan, plan_fr, plan_ftr, plan_star,
+                        plan_tr, tree_flows)
+from repro.coding import GF16, RLNC
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ftr_equals_fr_on_star_only_networks(seed):
+    rng = random.Random(seed)
+    d = rng.randint(4, 8)
+    k = rng.randint(2, d - 1)
+    p = CodeParams.msr(n=d + 2, k=k, d=d, M=float(k * (d - k + 1) * 10))
+    direct = [rng.uniform(10, 120) for _ in range(d)]
+    net = OverlayNetwork.star_only(direct, cross=1e-6)
+    fr = plan_fr(net, p)
+    ftr = plan_ftr(net, p)
+    assert ftr.time == pytest.approx(fr.time, rel=1e-4)
+    assert all(pa == 0 for pa in ftr.parent.values())  # star tree chosen
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_mixed_scheme_multi_round_mds(seed):
+    rng = random.Random(seed)
+    k, d = 2, 4
+    n = d + 2
+    p = CodeParams.msr(n=n, k=k, d=d, M=float(k * (d - k + 1) * 5))
+    g = InfoFlowGraph(p, initial_nodes=list(range(1, n + 1)))
+    planners = [plan_star, plan_fr, plan_tr, plan_ftr]
+    next_id = n + 1
+    for r in range(4):
+        failed = rng.choice(g.live)
+        providers = rng.sample([x for x in g.live if x != failed], d)
+        cap = [[rng.uniform(5, 120) if u != v else 0.0
+                for v in range(d + 1)] for u in range(d + 1)]
+        plan = planners[r % 4](OverlayNetwork(cap), p)
+        g.fail_and_repair(failed, event_from_plan(plan, next_id, providers))
+        next_id += 1
+    worst, flow = g.worst_collector()
+    assert flow >= p.M - 1e-6, (worst, flow)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_executed_tree_plan_with_ceil_rounding_keeps_mds(seed):
+    """Integral executor semantics: ceil(beta_i), ceil(flows) on the RLNC
+    data plane, tree relaying included, then every k-subset decodes."""
+    from repro.coding import GF8
+    rng = random.Random(seed)
+    nprng = np.random.default_rng(seed)
+    k, d, n = 2, 4, 6
+    alpha = 6
+    p = CodeParams(n=n, k=k, d=d, M=float(k * alpha), alpha=float(alpha))
+    cap = [[rng.uniform(5, 120) if u != v else 0.0
+            for v in range(d + 1)] for u in range(d + 1)]
+    plan = plan_ftr(OverlayNetwork(cap), p)
+    rl = RLNC(GF8)
+    blocks = GF8.random((k * alpha, 8), nprng)
+    nodes = dict(enumerate(rl.distribute(blocks, n, alpha, nprng), 1))
+    providers = list(range(1, d + 1))
+    children = {}
+    for u, pa in plan.parent.items():
+        children.setdefault(pa, []).append(u)
+
+    def produce(u):
+        own = rl.encode(nodes[u], math.ceil(plan.betas[u - 1] - 1e-9), nprng)
+        recv = None
+        for ch in children.get(u, []):
+            part = produce(ch)
+            recv = part if recv is None else recv.concat(part)
+        if recv is None:
+            return own
+        quota = math.ceil(plan.flows[(u, plan.parent[u])] - 1e-9)
+        return rl.relay(recv, own, quota, nprng)
+
+    received = None
+    for r in children.get(0, []):
+        part = produce(r)
+        received = part if received is None else received.concat(part)
+    newcomer = rl.regenerate(received, alpha, nprng)
+    survivors = {**{i: nodes[i] for i in range(1, n)}, n: newcomer}
+    ids = sorted(survivors)
+    ok = sum(rl.can_reconstruct([survivors[a], survivors[b]], k * alpha)
+             for i, a in enumerate(ids) for b in ids[i + 1:])
+    total = len(ids) * (len(ids) - 1) // 2
+    assert ok >= total - 1  # whp over GF(2^8); allow one unlucky pair
+
+
+def test_gf16_roundtrip():
+    rng = np.random.default_rng(0)
+    A = GF16.random((12, 12), rng)
+    while GF16.rank(A) < 12:
+        A = GF16.random((12, 12), rng)
+    X = GF16.random((12, 5), rng)
+    Y = GF16.matmul(A, X)
+    np.testing.assert_array_equal(GF16.solve(A, Y), X)
+    # field has full multiplicative order
+    assert len(set(GF16.exp[:65535].tolist())) == 65535
+
+
+def test_gf16_rlnc_distribute_reconstruct():
+    rng = np.random.default_rng(1)
+    rl = RLNC(GF16)
+    blocks = GF16.random((8, 4), rng)
+    nodes = rl.distribute(blocks, 5, 2, rng)
+    got = rl.reconstruct(nodes[:4], 8)
+    np.testing.assert_array_equal(got, blocks)

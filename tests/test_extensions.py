@@ -1,0 +1,84 @@
+"""Beyond-paper extensions: transfer-model robustness + multi-failure."""
+import random
+
+import pytest
+
+from repro.core import (CodeParams, OverlayNetwork, plan_fr, plan_ftr,
+                        plan_multi_failures, plan_star, plan_tr,
+                        store_and_forward_time, streaming_time_with_latency)
+
+
+def fig1_net():
+    net = OverlayNetwork.star_only([70.0, 50.0, 20.0, 10.0], cross=5.0)
+    net.cap[4][1] = 35.0
+    return net
+
+
+P = CodeParams.msr(n=5, k=2, d=4, M=480.0)
+
+
+def test_star_unaffected_by_store_and_forward():
+    plan = plan_star(fig1_net(), P)
+    assert store_and_forward_time(plan, fig1_net()) == pytest.approx(plan.time)
+
+
+def test_tree_degrades_under_store_and_forward():
+    """TR's Fig. 1 tree: v4 relays through v1, so S&F serializes the hop."""
+    net = fig1_net()
+    plan = plan_tr(net, P)
+    sf = store_and_forward_time(plan, net)
+    assert sf > plan.time + 1e-9
+    # v4 sends 80/35 = 2.286s, then v1 forwards 160/70 = 2.286s -> 4.571s
+    assert sf == pytest.approx(80 / 35 + 160 / 70, rel=1e-6)
+
+
+def test_streaming_latency_reduces_to_paper_model():
+    net = fig1_net()
+    plan = plan_ftr(net, P)
+    assert streaming_time_with_latency(plan, net, 0.0) == pytest.approx(
+        plan.time, rel=1e-6)
+    assert streaming_time_with_latency(plan, net, 0.1) > plan.time
+
+
+def test_sf_robustness_ordering():
+    """Even under S&F, FTR should not be worse than STAR on random nets
+    (trees only adopted when they pay)."""
+    rng = random.Random(0)
+    worse = 0
+    for _ in range(10):
+        d = 6
+        cap = [[rng.uniform(10, 120) if u != v else 0.0
+                for v in range(d + 1)] for u in range(d + 1)]
+        net = OverlayNetwork(cap)
+        p = CodeParams.msr(n=8, k=3, d=d, M=720.0)
+        star = plan_star(net, p).time
+        ftr = plan_ftr(net, p)
+        if store_and_forward_time(ftr, net) > star + 1e-9:
+            worse += 1
+    # S&F can erase the tree advantage but rarely inverts it badly
+    assert worse <= 3
+
+
+def test_multi_failure_contention():
+    rng = random.Random(1)
+    d = 5
+    p = CodeParams.msr(n=8, k=3, d=d, M=600.0)
+
+    def rand_net():
+        cap = [[rng.uniform(10, 120) if u != v else 0.0
+                for v in range(d + 1)] for u in range(d + 1)]
+        return OverlayNetwork(cap)
+
+    overlays = [rand_net(), rand_net()]
+    plans = plan_multi_failures(p, overlays, planner=plan_fr,
+                                contention=1.0)
+    assert len(plans) == 2
+    for plan, t in plans:
+        assert t < float("inf")
+        plan_obj = plan
+        assert plan_obj.scheme in ("fr", "ftr")
+    # with zero contention both plans equal their standalone optima
+    solo = [plan_fr(o, p).time for o in overlays]
+    free = plan_multi_failures(p, overlays, planner=plan_fr, contention=0.0)
+    for (pl, t), s in zip(free, solo):
+        assert t == pytest.approx(s, rel=1e-6)

@@ -1,0 +1,106 @@
+"""Fault-tolerance layer: erasure-coded checkpoint save / fail / regenerate /
+restore round-trips on real pytrees, elastic resharding, straggler response."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.ft import (ECCheckpoint, ErasureCoder, Fleet, FleetConfig,
+                      bytes_to_tree, tree_to_bytes)
+
+
+def make_state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.normal(size=(32, 16)).astype(np.float32),
+                   "b": jnp.asarray(rng.normal(size=(16,)), jnp.bfloat16)},
+        "opt": {"m": rng.normal(size=(32, 16)).astype(np.float32),
+                "step": np.int32(123)},
+    }
+
+
+def trees_equal(a, b):
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def test_tree_bytes_roundtrip():
+    state = make_state()
+    buf, spec = tree_to_bytes(state)
+    assert trees_equal(state, bytes_to_tree(buf, spec))
+
+
+def make_ckpt(seed=0, n=8, k=4, d=6):
+    fleet = Fleet(FleetConfig(num_pods=2, hosts_per_pod=8), seed=seed)
+    coder = ErasureCoder(n=n, k=k, d=d, blocks_per_host=8, seed=seed)
+    ckpt = ECCheckpoint(fleet, coder, hosts=list(range(n)), seed=seed)
+    state = make_state(seed)
+    ckpt.save(state, step=7)
+    return fleet, ckpt, state
+
+
+def test_save_restore_any_k():
+    _, ckpt, state = make_ckpt()
+    for hosts in ([0, 1, 2, 3], [4, 5, 6, 7], [1, 3, 5, 7]):
+        assert trees_equal(state, ckpt.restore(hosts))
+
+
+@pytest.mark.parametrize("scheme", ["star", "fr", "tr", "ftr", "auto"])
+def test_failure_regeneration(scheme):
+    _, ckpt, state = make_ckpt(seed=3)
+    log = ckpt.on_host_failure(2, scheme=scheme)
+    assert log.report.regenerated_host == 2
+    assert np.isfinite(log.decision.predicted_s)
+    # after regeneration, any k hosts including the newcomer still restore
+    assert trees_equal(state, ckpt.restore([2, 4, 6, 7]))
+    assert trees_equal(state, ckpt.restore([0, 1, 2, 5]))
+
+
+def test_repeated_failures_preserve_mds():
+    _, ckpt, state = make_ckpt(seed=5)
+    for failed in (1, 6, 3, 1, 0):
+        ckpt.on_host_failure(failed, scheme="ftr")
+    assert trees_equal(state, ckpt.restore([0, 1, 3, 6]))
+    assert trees_equal(state, ckpt.restore([2, 4, 5, 7]))
+
+
+def test_ftr_beats_or_matches_star_prediction():
+    _, ckpt, _ = make_ckpt(seed=9)
+    log = ckpt.on_host_failure(4, scheme="auto")
+    alts = log.decision.alternatives
+    assert alts["ftr"] <= alts["star"] + 1e-9
+    assert log.decision.predicted_s <= min(alts.values()) + 1e-9
+
+
+def test_straggler_rerouting():
+    """A straggling provider must carry less traffic under FR/FTR than its
+    fair share."""
+    fleet, ckpt, _ = make_ckpt(seed=11)
+    # make host 1 a hard straggler and fail host 0
+    fleet.straggle.clear()
+    fleet.mark_straggler(1, 0.02)
+    log = ckpt.on_host_failure(0, scheme="fr")
+    decision = log.decision
+    if 1 in decision.providers:
+        i = decision.providers.index(1) + 1
+        betas = decision.plan.betas
+        fair = sum(betas) / len(betas)
+        assert betas[i - 1] <= fair + 1e-9, (betas, i)
+
+
+def test_elastic_reshard():
+    fleet, ckpt, state = make_ckpt(seed=13)
+    new_coder = ErasureCoder(n=6, k=3, d=4, blocks_per_host=8, seed=99)
+    ck2 = ckpt.reshard(new_coder, new_hosts=[8, 9, 10, 11, 12, 13])
+    assert trees_equal(state, ck2.restore([9, 11, 13]))
+    ck2.on_host_failure(10, scheme="ftr")
+    assert trees_equal(state, ck2.restore([8, 10, 12]))
+
+
+def test_replacement_host_id():
+    fleet, ckpt, state = make_ckpt(seed=17)
+    log = ckpt.on_host_failure(5, replacement=15, scheme="ftr")
+    assert 15 in ckpt.group.shards and 5 not in ckpt.group.shards
+    assert trees_equal(state, ckpt.restore([15, 0, 1, 2]))
