@@ -40,16 +40,23 @@ def run():
         a = rng.integers(0, 256, (m, k), dtype=np.uint8)
         b = rng.integers(0, 256, (k, n), dtype=np.uint8)
         t_pallas = _time(lambda: np.asarray(gf_matmul(a, b)))
-        t_numpy = _time(lambda: GF8.matmul(a, b))
+        t_numpy = _time(lambda: GF8.matmul(a, b))          # blocked lookup
+        t_rowloop = _time(lambda: GF8.matmul_rowloop(a, b))  # old per-k loop
+        np.testing.assert_array_equal(GF8.matmul(a, b), GF8.matmul_rowloop(a, b))
         macs = m * k * n
         tpu_est_s = macs / GF_MAC_CEILING
         artifact["points"].append({
             "shape": [m, k, n], "interpret_s": t_pallas, "numpy_s": t_numpy,
-            "tpu_ceiling_s": tpu_est_s})
+            "numpy_rowloop_s": t_rowloop, "tpu_ceiling_s": tpu_est_s})
         rows.append(row(
             f"kernel_gf/{m}x{k}x{n}",
             t_pallas * 1e6,
             f"numpy={t_numpy*1e6:.0f}us tpu_ceiling={tpu_est_s*1e6:.2f}us "
             f"macs={macs}"))
+        rows.append(row(
+            f"kernel_gf/table_{m}x{k}x{n}",
+            t_numpy * 1e6,
+            f"blocked={t_numpy*1e6:.0f}us rowloop={t_rowloop*1e6:.0f}us "
+            f"speedup={t_rowloop/max(t_numpy, 1e-12):.1f}x"))
     save_artifact("kernel_gf", artifact)
     return rows

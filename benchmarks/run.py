@@ -1,8 +1,15 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Set BENCH_QUICK=1 for a fast
-smoke pass; full runs also write JSON artifacts under
+Prints ``name,us_per_call,derived`` CSV.  Set ``BENCH_QUICK=1`` in the
+environment for a fast smoke pass (fewer shapes / Monte-Carlo batches of 80
+instead of 120 trials); every run also writes JSON artifacts under
 ``benchmarks/artifacts/`` (consumed by EXPERIMENTS.md).
+
+Every run additionally consolidates the planning-relevant results into
+``BENCH_planning.json`` at the repo root — per-figure-row ``us_per_call``
+plus per-scheme mean planner wall time (``plan_ms``) aggregated from the
+fig6/fig7/fig8 artifacts — so the perf trajectory of the batched planning
+engine (repro.core.batched) is machine-trackable across PRs.
 
 Modules:
   fig6_d_sweep    — Fig. 6 (regeneration time & bandwidth vs d)
@@ -16,6 +23,8 @@ Modules:
 from __future__ import annotations
 
 import importlib
+import json
+import os
 import sys
 import traceback
 
@@ -29,10 +38,52 @@ MODULES = [
     "roofline",
 ]
 
+PLANNING_MODULES = ("fig6_d_sweep", "fig7_bandwidth", "fig8_alpha")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _scheme_plan_ms(ran_modules) -> dict:
+    """Mean per-scheme planner wall time over the fig6/7/8 artifacts THIS
+    run produced (stale artifact files from earlier runs are ignored so the
+    summary never mixes trial counts or quick/full settings)."""
+    from .common import ARTIFACT_DIR
+
+    acc: dict = {}
+    for mod in PLANNING_MODULES:
+        if mod not in ran_modules:
+            continue
+        path = os.path.join(ARTIFACT_DIR, f"{mod}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            data = json.load(f)
+        for point in data.get("points", []):
+            for scheme, vals in point.items():
+                if isinstance(vals, dict) and "plan_ms" in vals:
+                    acc.setdefault(scheme, []).append(vals["plan_ms"])
+    return {s: sum(v) / len(v) for s, v in acc.items() if v}
+
+
+def _write_planning_summary(rows_by_module: dict) -> None:
+    summary = {
+        "quick": os.environ.get("BENCH_QUICK", "0") == "1",
+        "rows": {
+            r["name"]: round(r["us_per_call"], 3)
+            for mod in PLANNING_MODULES
+            for r in rows_by_module.get(mod, [])
+        },
+        "schemes": {s: {"plan_ms": round(ms, 4)}
+                    for s, ms in _scheme_plan_ms(rows_by_module).items()},
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_planning.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+
 
 def main() -> None:
     print("name,us_per_call,derived")
     failures = []
+    rows_by_module: dict = {}
     for mod_name in MODULES:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
@@ -41,12 +92,19 @@ def main() -> None:
                 continue  # optional module not built yet
             raise
         try:
-            for r in mod.run():
+            rows = list(mod.run())
+            rows_by_module[mod_name] = rows
+            for r in rows:
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
             sys.stdout.flush()
         except Exception:
             failures.append(mod_name)
             traceback.print_exc()
+    try:
+        _write_planning_summary(rows_by_module)
+    except Exception:
+        failures.append("BENCH_planning.json")
+        traceback.print_exc()
     if failures:
         raise SystemExit(f"benchmark modules failed: {failures}")
 

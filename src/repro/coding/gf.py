@@ -46,6 +46,15 @@ class GF:
         self.poly = GF8_POLY if bits == 8 else GF16_POLY
         self.exp, self.log = _tables(bits)
         self.dtype = np.uint8 if bits == 8 else np.uint16
+        # Narrow tables for the blocked matmul.  mul_log[0] points past the
+        # live EXP region, where mul_exp is zero — so products with a zero
+        # operand come out 0 straight from the gather, with no mask pass.
+        # Narrow dtypes keep the (m, bk, n) product block cache-resident.
+        q1 = self.q - 1
+        self.mul_exp = np.zeros(4 * q1 + 1, dtype=self.dtype)
+        self.mul_exp[:2 * q1] = self.exp.astype(self.dtype)
+        self.mul_log = self.log.astype(np.int32)
+        self.mul_log[0] = 2 * q1
 
     # -- scalar/elementwise ------------------------------------------------
 
@@ -74,15 +83,46 @@ class GF:
 
     # -- linear algebra ----------------------------------------------------
 
-    def matmul(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
-        """C = A @ B over GF (XOR-accumulate of field products)."""
+    def matmul(self, A: np.ndarray, B: np.ndarray,
+               block_k: int | None = None) -> np.ndarray:
+        """C = A @ B over GF (XOR-accumulate of field products).
+
+        Blocked table-lookup formulation: a whole K-chunk of outer products
+        is gathered from the narrow EXP table as one (m, bk, n) lookup and
+        folded with a single XOR reduction, instead of one Python-level
+        iteration per K column (``matmul_rowloop``, kept as the reference
+        oracle).  ``block_k`` keeps the field-dtype temporary inside ~2 MB
+        (cache-resident) by default.
+        """
+        A = np.asarray(A, dtype=np.int64)
+        B = np.asarray(B, dtype=np.int64)
+        assert A.ndim == 2 and B.ndim == 2 and A.shape[1] == B.shape[0]
+        m, K = A.shape
+        n = B.shape[1]
+        if block_k is None:
+            # working set per block: the int32 index intermediate (4 B/elem)
+            # plus the field-dtype product — size both into ~2 MB
+            elem_bytes = 4 + self.dtype().itemsize
+            block_k = max(1, min(K, (1 << 21) // max(1, m * n * elem_bytes)))
+        logA = self.mul_log[A]
+        logB = self.mul_log[B]
+        out = np.zeros((m, n), dtype=self.dtype)
+        for k0 in range(0, K, block_k):
+            k1 = min(k0 + block_k, K)
+            out ^= np.bitwise_xor.reduce(
+                self.mul_exp[logA[:, k0:k1, None] + logB[None, k0:k1, :]],
+                axis=1)
+        return out
+
+    def matmul_rowloop(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        """Reference oracle: per-column XOR-accumulate (the pre-blocking
+        implementation; benchmarked against ``matmul`` in benchmarks/kernel_gf)."""
         A = np.asarray(A, dtype=np.int64)
         B = np.asarray(B, dtype=np.int64)
         assert A.ndim == 2 and B.ndim == 2 and A.shape[1] == B.shape[0]
         logA = self.log[A]
         logB = self.log[B]
         out = np.zeros((A.shape[0], B.shape[1]), dtype=np.int64)
-        # row-blocked table lookups; zeros handled by masking
         for k in range(A.shape[1]):
             prod = self.exp[logA[:, k][:, None] + logB[k][None, :]]
             prod = np.where((A[:, k][:, None] == 0) | (B[k][None, :] == 0), 0, prod)

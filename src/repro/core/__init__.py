@@ -49,3 +49,12 @@ from .extensions import (plan_multi_failures, store_and_forward_time,
                          streaming_time_with_latency)
 __all__ += ["plan_multi_failures", "store_and_forward_time",
             "streaming_time_with_latency"]
+
+from .batched import (BATCHED_SCHEMES, BatchPlanResult, caps_tensor,
+                      minmax_time_star_batch, plan_batch, plan_fr_batch,
+                      plan_ftr_batch, plan_star_batch, plan_tr_batch,
+                      tree_optimal_time_batch)
+__all__ += ["BATCHED_SCHEMES", "BatchPlanResult", "caps_tensor",
+            "minmax_time_star_batch", "plan_batch", "plan_fr_batch",
+            "plan_ftr_batch", "plan_star_batch", "plan_tr_batch",
+            "tree_optimal_time_batch"]

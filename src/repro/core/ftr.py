@@ -24,13 +24,24 @@ from .regions import FeasibleRegion, heuristic_region, msr_region
 from . import lp
 from .tree import plan_tr
 
+# Search hyper-parameters, shared with the batched engine (repro.core.batched
+# mirrors this planner decision-for-decision; importing these keeps the two
+# implementations from drifting apart).
+EVAL_ITERS = 40        # fresh-tree bisection depth (eval_tree)
+REFINE_ITERS = 28      # incumbent-bounded bisection depth (_refine)
+FINAL_ITERS = 50       # high-precision solve on the winning tree
+LOCAL_SEARCH_ROUNDS = 3
+LOCAL_SEARCH_ALTS = 8  # alternative parents probed per pivot node
+PROBE_SLACK = 1 - 1e-7  # pivot must beat the incumbent by this factor
+
 
 def _edge_caps(parent: Dict[int, int], net: OverlayNetwork) -> Dict[Edge, float]:
     return {(u, p): net.c(u, p) for u, p in parent.items()}
 
 
 def eval_tree(parent: Dict[int, int], net: OverlayNetwork, params: CodeParams,
-              region: FeasibleRegion, iters: int = 40, use_lp: bool = False,
+              region: FeasibleRegion, iters: int = EVAL_ITERS,
+              use_lp: bool = False,
               ) -> Tuple[float, Optional[List[float]]]:
     return lp.tree_optimal_time(parent, _edge_caps(parent, net), region,
                                 params.alpha, iters=iters, use_lp=use_lp)
@@ -89,7 +100,8 @@ def _feasible_at(t: float, parent: Dict[int, int], net: OverlayNetwork,
 
 
 def _refine(parent: Dict[int, int], net: OverlayNetwork, params: CodeParams,
-            region: FeasibleRegion, t_ub: float, iters: int = 28) -> float:
+            region: FeasibleRegion, t_ub: float,
+            iters: int = REFINE_ITERS) -> float:
     """Bisect the optimal time of ``parent`` knowing it is feasible at t_ub."""
     lo, hi = 0.0, t_ub
     for _ in range(iters):
@@ -103,7 +115,8 @@ def _refine(parent: Dict[int, int], net: OverlayNetwork, params: CodeParams,
 
 def _local_search(parent: Dict[int, int], net: OverlayNetwork,
                   params: CodeParams, region: FeasibleRegion, t_cur: float,
-                  max_rounds: int = 3, max_alts: int = 8,
+                  max_rounds: int = LOCAL_SEARCH_ROUNDS,
+                  max_alts: int = LOCAL_SEARCH_ALTS,
                   ) -> Tuple[Dict[int, int], float]:
     """Pivot search with incremental evaluation: each candidate pivot is
     first probed with a single feasibility check at the incumbent time;
@@ -122,7 +135,7 @@ def _local_search(parent: Dict[int, int], net: OverlayNetwork,
                           key=lambda v: -net.c(u, v))[:max_alts]
             for v in alts:
                 parent[u] = v
-                if _feasible_at(t_cur * (1 - 1e-7), parent, net, params, region):
+                if _feasible_at(t_cur * PROBE_SLACK, parent, net, params, region):
                     t_cur = _refine(parent, net, params, region, t_cur)
                     cur_p = v
                     improved = True
@@ -180,8 +193,8 @@ def plan_ftr(net: OverlayNetwork, params: CodeParams,
     assert best_parent is not None
     # final high-precision solve on the winning tree (LP for the
     # traffic-minimal witness at the optimal time)
-    t_star, betas = eval_tree(best_parent, net, params, region, iters=50,
-                              use_lp=True)
+    t_star, betas = eval_tree(best_parent, net, params, region,
+                              iters=FINAL_ITERS, use_lp=True)
     if betas is None:  # pragma: no cover - winning tree is feasible by search
         raise RuntimeError("FTR: winning tree lost feasibility at final solve")
     flows = tree_flows(best_parent, betas, params.alpha)

@@ -39,7 +39,8 @@ except Exception:  # pragma: no cover
 from .params import CodeParams, Edge
 from .regions import FeasibleRegion, sigma
 
-_BISECT_ITERS = 60
+BISECT_ITERS = 60   # star bisection depth (shared with repro.core.batched)
+_BISECT_ITERS = BISECT_ITERS
 _TOL = 1e-9
 
 

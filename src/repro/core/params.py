@@ -8,17 +8,20 @@ solutions are rounded up by the executor; tests check rounding keeps MDS).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 Edge = Tuple[int, int]  # (child u, parent v): data flows u -> v toward root
 
 
+@functools.lru_cache(maxsize=4096)
 def uniform_beta(M: float, k: int, d: int, alpha: float) -> float:
     """Per-provider repair traffic of the conventional scheme (Theorem 3).
 
     The smallest b >= 0 with  sum_{j=1..k} min((d-k+j)*b, alpha) = M.
-    Exists iff k*alpha >= M and d >= k.
+    Exists iff k*alpha >= M and d >= k.  Cached: the planners evaluate this
+    once per edge comparison on the Monte-Carlo hot path.
     """
     if d < k:
         raise ValueError(f"need d >= k, got d={d} k={k}")

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence
 
+import numpy as np
+
 from .params import CodeParams
 
 
@@ -30,6 +32,19 @@ def sigma(j: int, beta: Sequence[float], k: int, d: int) -> float:
     if not (1 <= j <= k) or m > len(beta):
         raise ValueError(f"sigma_{j} undefined for d={d} k={k} len={len(beta)}")
     return sum(sorted(beta)[:m])
+
+
+def sigma_all_batch(beta: np.ndarray, k: int, d: int) -> np.ndarray:
+    """All sigma_j at once over a batch: ``beta`` is (..., d), the result is
+    (..., k) with entry j-1 = sum of the (d-k+j) smallest components.
+
+    One sort + cumsum per batch element replaces k re-sorted Python sums —
+    the vectorized core of the Theorem-1 feasibility check.
+    """
+    s = np.sort(beta, axis=-1)
+    cs = np.cumsum(s, axis=-1)
+    idx = np.arange(d - k, d)  # m_j - 1 for j = 1..k
+    return cs[..., idx]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +67,11 @@ class FeasibleRegion:
             sigma(j, beta, self.k, self.d) >= self.x[j - 1] - tol
             for j in range(1, self.k + 1)
         )
+
+    def contains_batch(self, beta: np.ndarray, tol: float = 1e-9) -> np.ndarray:
+        """Vectorized ``contains``: ``beta`` is (..., d), returns (...,) bool."""
+        sig = sigma_all_batch(np.asarray(beta, dtype=np.float64), self.k, self.d)
+        return np.all(sig >= np.asarray(self.x) - tol, axis=-1)
 
     def mincut(self, alpha: float) -> float:
         """MC(D, alpha) from eq. (3): sum_j min(min_{beta in D} sigma_j, alpha).

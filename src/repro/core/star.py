@@ -13,6 +13,15 @@ def _star_parent(d: int) -> Dict[int, int]:
     return {i: 0 for i in range(1, d + 1)}
 
 
+def _star_time(flows: Dict, caps: List[float], d: int) -> float:
+    """max_i f(i,0)/c_i with inf on nonpositive links (shared by every star
+    planner; repro.core.batched vectorizes the same expression)."""
+    if not d:
+        return 0.0
+    return max((flows[(i, 0)] / caps[i - 1]) if caps[i - 1] > 0 else float("inf")
+               for i in range(1, d + 1))
+
+
 def plan_star(net: OverlayNetwork, params: CodeParams) -> RepairPlan:
     """Conventional regeneration: uniform beta from every provider straight
     to the newcomer (Dimakis et al. [3])."""
@@ -21,9 +30,7 @@ def plan_star(net: OverlayNetwork, params: CodeParams) -> RepairPlan:
     betas = [b] * d
     parent = _star_parent(d)
     flows = tree_flows(parent, betas, params.alpha)
-    caps = net.direct_caps()
-    time = max((flows[(i, 0)] / caps[i - 1]) if caps[i - 1] > 0 else float("inf")
-               for i in range(1, d + 1))
+    time = _star_time(flows, net.direct_caps(), d)
     return RepairPlan("star", params, parent, betas, flows, time)
 
 
@@ -78,8 +85,7 @@ def plan_fr(net: OverlayNetwork, params: CodeParams,
 
     parent = _star_parent(d)
     flows = tree_flows(parent, betas, params.alpha)
-    t = max((flows[(i, 0)] / caps[i - 1]) if caps[i - 1] > 0 else float("inf")
-            for i in range(1, d + 1)) if d else 0.0
+    t = _star_time(flows, caps, d)
     return RepairPlan("fr", params, parent, betas, flows, max(t, 0.0),
                       lower_bound=time)
 
@@ -127,6 +133,5 @@ def plan_shah(net: OverlayNetwork, params: CodeParams,
         surplus -= cut
     parent = _star_parent(d)
     flows = tree_flows(parent, betas, params.alpha)
-    time = max((flows[(i, 0)] / caps[i - 1]) if caps[i - 1] > 0 else float("inf")
-               for i in range(1, d + 1))
+    time = _star_time(flows, caps, d)
     return RepairPlan("shah", params, parent, betas, flows, time)

@@ -40,17 +40,24 @@ def plan_tr(net: OverlayNetwork, params: CodeParams) -> RepairPlan:
     remaining = set(range(1, d + 1))
 
     while remaining:
-        best: Optional[Tuple[float, int, int]] = None
+        # Tie-break: among equal partial times prefer the candidate whose new
+        # edge (v -> u) has the larger capacity c(v, u) — capacities are
+        # directed, so the child->parent direction matters.  The key is stored
+        # alongside the winner rather than recomputed from the stored (v, u)
+        # at every comparison, so the comparison provably uses the same
+        # quantity that was minimized.
+        best: Optional[Tuple[int, int]] = None
+        best_key: Optional[Tuple[float, float]] = None
         for v in sorted(remaining):
             for u in sorted(in_tree):
                 cand = dict(parent)
                 cand[v] = u
                 t = _partial_time(cand, net, params)
-                key = (t, -net.c(v, u))  # tie-break: prefer the faster link
-                if best is None or key < (best[0], -net.c(best[1], best[2])):
-                    best = (t, v, u)
+                key = (t, -net.c(v, u))
+                if best_key is None or key < best_key:
+                    best, best_key = (v, u), key
         assert best is not None
-        _, v, u = best
+        v, u = best
         parent[v] = u
         in_tree.add(v)
         remaining.discard(v)

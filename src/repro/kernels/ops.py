@@ -32,8 +32,13 @@ def _padded_call(a, b, bm, bn, bk, interpret):
     m, k = a.shape
     _, n = b.shape
     mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
-    a_p = jnp.zeros((mp, kp), jnp.uint8).at[:m, :k].set(a)
-    b_p = jnp.zeros((kp, np_), jnp.uint8).at[:k, :n].set(b)
+    if (mp, kp, np_) == (m, k, n):
+        # already block multiples: skip the padding copy on the hot path
+        return gf_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    # jnp.pad appends zero margins without materializing a full zero buffer
+    # first (the old zeros().at[].set() built and then overwrote one)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
     out = gf_matmul_pallas(a_p, b_p, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:m, :n]
 

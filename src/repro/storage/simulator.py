@@ -21,8 +21,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.coding import GF, GF8, RLNC, CodedBlocks
-from repro.core import (CodeParams, OverlayNetwork, RepairPlan, plan_time,
-                        SCHEMES)
+from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
+                        RepairPlan, caps_tensor, plan_time, SCHEMES)
 from .capacities import CapSampler
 
 
@@ -42,13 +42,45 @@ class SchemeStats:
 
 def compare_schemes(params: CodeParams, sampler: CapSampler,
                     schemes: Sequence[str], trials: int,
-                    seed: int = 0) -> Dict[str, SchemeStats]:
+                    seed: int = 0, engine: str = "batched",
+                    ) -> Dict[str, SchemeStats]:
+    """Monte-Carlo scheme comparison over ``trials`` sampled overlays.
+
+    ``engine="batched"`` (default) plans every trial at once with the
+    vectorized engine in :mod:`repro.core.batched`; schemes without a batched
+    planner (shah, rctree) transparently fall back to the scalar path.
+    ``engine="scalar"`` is the original per-network loop, kept as the
+    correctness oracle (see tests/test_batched.py).
+    """
     import time as _time
 
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}")
     rng = random.Random(seed)
+    nets = [sampler(rng, params.d) for _ in range(trials)]
+
+    if engine == "batched":
+        caps = caps_tensor(nets)
+        base = BATCHED_SCHEMES["star"](caps, params)
+        out: Dict[str, SchemeStats] = {}
+        for s in schemes:
+            t0 = _time.perf_counter()
+            if s in BATCHED_SCHEMES:
+                res = BATCHED_SCHEMES[s](caps, params)
+                times, traffic = res.times, res.traffic
+            else:  # scalar fallback for schemes not vectorized yet
+                plans = [SCHEMES[s](net, params) for net in nets]
+                times = np.array([p.time for p in plans])
+                traffic = np.array([p.total_traffic for p in plans])
+            dt = _time.perf_counter() - t0
+            out[s] = SchemeStats(
+                s, float(times.mean()), float((times / base.times).mean()),
+                float(traffic.mean()),
+                float((traffic / base.traffic).mean()), dt / trials)
+        return out
+
     acc = {s: [0.0, 0.0, 0.0, 0.0, 0.0] for s in schemes}
-    for _ in range(trials):
-        net = sampler(rng, params.d)
+    for net in nets:
         base = SCHEMES["star"](net, params)
         for s in schemes:
             t0 = _time.perf_counter()

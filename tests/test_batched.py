@@ -1,0 +1,178 @@
+"""Batched planning engine vs the scalar correctness oracle.
+
+The batched engine (repro.core.batched) must reproduce the scalar planners'
+outputs — regeneration time AND total repair traffic — on random
+heterogeneous networks across the full storage trade-off (MSR / interior /
+MBR operating points), and its results must not depend on how trials are
+packed into batches.
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork, SCHEMES,
+                        caps_tensor, mbr_point, plan_tr)
+from repro.core import batched as bt
+from repro.core.lp import waterfill_max
+
+SCHEME_NAMES = ("star", "fr", "tr", "ftr")
+
+
+def _nets(seed: int, count: int, d: int, lo=10.0, hi=120.0):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(count):
+        cap = [[0.0] * (d + 1) for _ in range(d + 1)]
+        for u in range(d + 1):
+            for v in range(d + 1):
+                if u != v:
+                    cap[u][v] = rng.uniform(lo, hi)
+        out.append(OverlayNetwork(cap))
+    return out
+
+
+def _param_points():
+    """MSR, interior and MBR operating points (n=12, k=3, d=6, M=600)."""
+    M, k, d, n = 600.0, 3, 6, 12
+    a_msr = M / k
+    a_mbr, _ = mbr_point(M, k, d)
+    return [
+        ("msr", CodeParams(n=n, k=k, d=d, M=M, alpha=a_msr)),
+        ("interior", CodeParams(n=n, k=k, d=d, M=M, alpha=0.5 * (a_msr + a_mbr))),
+        ("mbr", CodeParams(n=n, k=k, d=d, M=M, alpha=a_mbr)),
+    ]
+
+
+@pytest.mark.parametrize("point,params", _param_points())
+def test_batched_matches_scalar(point, params):
+    """>= 50 seeded networks in total across the three operating points;
+    every scheme's batched time/traffic matches the scalar planner 1e-6."""
+    nets = _nets(seed=hash(point) % 10_000, count=20, d=params.d)
+    caps = caps_tensor(nets)
+    for s in SCHEME_NAMES:
+        res = BATCHED_SCHEMES[s](caps, params)
+        scalar = [SCHEMES[s](net, params) for net in nets]
+        np.testing.assert_allclose(
+            res.times, [p.time for p in scalar], rtol=1e-9, atol=1e-6,
+            err_msg=f"{s}@{point}: time mismatch")
+        np.testing.assert_allclose(
+            res.traffic, [p.total_traffic for p in scalar], rtol=1e-9,
+            atol=1e-6, err_msg=f"{s}@{point}: traffic mismatch")
+
+
+def test_batched_invariant_to_batch_order_and_size():
+    """Lanes are independent: permuting the batch or splitting it into
+    sub-batches must not change any trial's result."""
+    params = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+    nets = _nets(seed=7, count=12, d=params.d)
+    caps = caps_tensor(nets)
+    perm = np.array([5, 0, 11, 3, 8, 1, 10, 2, 7, 4, 9, 6])
+    for s in ("tr", "ftr"):
+        full = BATCHED_SCHEMES[s](caps, params)
+        shuffled = BATCHED_SCHEMES[s](caps[perm], params)
+        np.testing.assert_allclose(shuffled.times, full.times[perm],
+                                   rtol=0, atol=1e-12)
+        np.testing.assert_allclose(shuffled.traffic, full.traffic[perm],
+                                   rtol=0, atol=1e-12)
+        lo_half = BATCHED_SCHEMES[s](caps[:5], params)   # uneven split
+        hi_half = BATCHED_SCHEMES[s](caps[5:], params)
+        np.testing.assert_allclose(
+            np.concatenate([lo_half.times, hi_half.times]), full.times,
+            rtol=0, atol=1e-12)
+        np.testing.assert_allclose(
+            np.concatenate([lo_half.traffic, hi_half.traffic]), full.traffic,
+            rtol=0, atol=1e-12)
+
+
+def test_waterfill_batch_matches_scalar_leximin():
+    """The chain-minimal batched water-fill computes the same (unique)
+    leximin point as the scalar one-freeze-per-round lp.waterfill_max."""
+    rng = random.Random(3)
+    d, alpha = 7, 40.0
+    parents_list, bounds_list = [], []
+    for _ in range(25):
+        parent = [0] * (d + 1)
+        for u in range(1, d + 1):
+            parent[u] = rng.randrange(0, u)  # u attaches above itself: a tree
+        parents_list.append(parent)
+        bounds_list.append([rng.uniform(5.0, 80.0) if rng.random() < 0.7
+                            else math.inf for _ in range(d)])
+    parents = np.array(parents_list)
+    bnd = np.array(bounds_list)
+    inc = bt.subtree_masks(parents)[:, 1:, :]
+    got = bt.waterfill_batch(inc, bnd, alpha)
+    for i in range(parents.shape[0]):
+        laminar = [(list(np.flatnonzero(inc[i, u])), bnd[i, u])
+                   for u in range(d) if math.isfinite(bnd[i, u])]
+        want = waterfill_max([alpha] * d, laminar)
+        np.testing.assert_allclose(got[i], want, rtol=1e-9, atol=1e-9)
+
+
+def test_compare_schemes_engines_agree():
+    """storage.compare_schemes: batched and scalar engines produce the same
+    statistics on the same seeded trial sequence."""
+    from repro.storage import compare_schemes, uniform
+
+    params = CodeParams.msr(n=12, k=3, d=5, M=300.0)
+    a = compare_schemes(params, uniform(), SCHEME_NAMES, trials=8, seed=11,
+                        engine="batched")
+    b = compare_schemes(params, uniform(), SCHEME_NAMES, trials=8, seed=11,
+                        engine="scalar")
+    for s in SCHEME_NAMES:
+        assert a[s].mean_time == pytest.approx(b[s].mean_time, rel=1e-9)
+        assert a[s].mean_norm_time == pytest.approx(b[s].mean_norm_time,
+                                                    rel=1e-9)
+        assert a[s].mean_traffic == pytest.approx(b[s].mean_traffic, rel=1e-9)
+        assert a[s].mean_norm_traffic == pytest.approx(b[s].mean_norm_traffic,
+                                                       rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# plan_tr tie-break regression (crafted capacity matrix)
+# ---------------------------------------------------------------------------
+
+def _tiebreak_net() -> OverlayNetwork:
+    """d = 3 overlay engineered so Algorithm 1's second step produces an
+    EXACT time tie between attaching v2 to the newcomer (c(2,0) = 24,
+    t = max(12/24, 12/48) = 0.5) and relaying v2 through v1 (c(2,1) = 48,
+    t = max(12/48, 24/48) = 0.5).  The faster link must win -> parent[2] = 1.
+
+    The reverse direction c(0,2) = 48 > c(2,0) and c(1,2) = 24 < c(2,1) are
+    set adversarially: a greedy comparing capacities in the wrong (parent ->
+    child) direction, or one ignoring capacities on ties, would instead pick
+    parent[2] = 0.
+    """
+    d = 3
+    cap = [[5.0] * (d + 1) for _ in range(d + 1)]
+    for i in range(d + 1):
+        cap[i][i] = 0.0
+    cap[1][0] = 48.0
+    cap[2][0] = 24.0
+    cap[2][1] = 48.0
+    cap[3][0] = 6.0
+    cap[3][1] = 5.0
+    cap[3][2] = 5.0
+    cap[0][2] = 48.0   # adversarial reverse directions
+    cap[1][2] = 24.0
+    return OverlayNetwork(cap)
+
+
+TIEBREAK_PARAMS = CodeParams(n=5, k=2, d=3, M=60.0, alpha=45.0)
+
+
+def test_plan_tr_tie_prefers_faster_link():
+    assert TIEBREAK_PARAMS.beta == pytest.approx(12.0)
+    plan = plan_tr(_tiebreak_net(), TIEBREAK_PARAMS)
+    assert plan.parent == {1: 0, 2: 1, 3: 0}
+    plan.validate(_tiebreak_net())
+
+
+def test_plan_tr_batch_matches_tiebreak():
+    caps = caps_tensor([_tiebreak_net()])
+    res = BATCHED_SCHEMES["tr"](caps, TIEBREAK_PARAMS)
+    assert res.parents[0].tolist() == [0, 0, 1, 0]
+    scalar = plan_tr(_tiebreak_net(), TIEBREAK_PARAMS)
+    assert res.times[0] == pytest.approx(scalar.time)
+    assert res.traffic[0] == pytest.approx(scalar.total_traffic)
