@@ -1,0 +1,123 @@
+"""Fleet-scale sweep: cluster size x failure rate x repair policy.
+
+Runs the event-driven fleet simulator (``repro.fleet``) over the scenario
+library and writes two artifacts:
+
+* ``benchmarks/artifacts/fleet_scale.json`` — the usual per-module record;
+* ``BENCH_fleet.json`` at the repo root — the machine-trackable fleet
+  metrics (backlog, p50/p99 regeneration time under contention,
+  vulnerability window, MTTDL estimate) per configuration.
+
+Determinism: every configuration's simulator seed is derived from one root
+seed (threaded in by ``benchmarks/run.py``, or ``--seed`` on the CLI) and
+the config name via crc32, and no wall-clock measurement enters the JSON —
+``BENCH_fleet.json`` is bitwise reproducible across runs on one machine.
+Wall time only feeds the ``us_per_call`` CSV column.
+
+CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N]`` (CI runs the
+``--quick`` smoke, which asserts the artifact exists and backlog is finite).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+import zlib
+
+from repro.core import CodeParams
+from repro.fleet import SCENARIOS, make_policy, simulate
+
+from .common import quick_mode, row, save_artifact
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# ~events per simulation: duration is sized as EVENT_BUDGET failures in
+# expectation, so sweeping the failure rate changes contention, not cost
+EVENT_BUDGET_QUICK = 40
+EVENT_BUDGET = 150
+
+
+def _config_seed(root_seed: int, name: str) -> int:
+    return (root_seed * 1_000_003 + zlib.crc32(name.encode())) % (1 << 31)
+
+
+def _params(d: int = 6) -> CodeParams:
+    return CodeParams.msr(n=12, k=3, d=d, M=600.0)
+
+
+def _sweep(quick: bool):
+    """Yield (name, scenario, policy_spec) configurations."""
+    sizes = (16,) if quick else (16, 32, 64)
+    rates = (2e-3,) if quick else (1e-3, 4e-3)
+    policies = (("star", "ftr", "flexible") if quick
+                else ("star", "fr", "tr", "ftr", "flexible"))
+    budget = EVENT_BUDGET_QUICK if quick else EVENT_BUDGET
+    for n in sizes:
+        for lam in rates:
+            duration = budget / (lam * n)
+            for pol in policies:
+                sc = SCENARIOS["steady"](n, failure_rate=lam,
+                                         duration=duration)
+                yield f"n{n}_lam{lam:g}_{pol}", sc, pol
+    if not quick:
+        # scenario-library column at fixed size/rate for the two best
+        # policies: rack bursts, capacity weather, degraded reads, tiered
+        n, lam = 24, 2e-3
+        duration = budget / (lam * n)
+        for kind in ("rack_bursts", "capacity_weather", "hot_reads",
+                     "tiered"):
+            for pol in ("ftr", "flexible"):
+                sc = SCENARIOS[kind](n, failure_rate=lam, duration=duration)
+                yield f"{kind}_n{n}_{pol}", sc, pol
+
+
+def run(root_seed: int = 0):
+    quick = quick_mode()
+    params = _params()
+    rows, configs = [], {}
+    for name, sc, pol in _sweep(quick):
+        t0 = time.perf_counter()
+        summary = simulate(sc, make_policy(pol), params,
+                           seed=_config_seed(root_seed, name))
+        wall = time.perf_counter() - t0
+        assert math.isfinite(summary["mean_backlog"]), name
+        assert summary["regen_p50"] >= 0 and summary["regen_p99"] >= 0, name
+        configs[name] = summary
+        events = max(summary["completed"] + summary["aborted"], 1)
+        rows.append(row(
+            f"fleet/{name}", wall / events * 1e6,
+            f"backlog={summary['mean_backlog']:.3f} "
+            f"p99={summary['regen_p99']:.3f}s "
+            f"vuln_p99={summary['vulnerability_p99']:.3f}s"))
+    artifact = {"quick": quick, "root_seed": root_seed, "configs": configs}
+    save_artifact("fleet_scale", artifact)
+    with open(os.path.join(REPO_ROOT, "BENCH_fleet.json"), "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0, help="root seed")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+    print("name,us_per_call,derived")
+    for r in run(root_seed=args.seed):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    path = os.path.join(REPO_ROOT, "BENCH_fleet.json")
+    assert os.path.exists(path), "BENCH_fleet.json was not written"
+    with open(path) as f:
+        data = json.load(f)
+    assert all(math.isfinite(c["mean_backlog"])
+               for c in data["configs"].values()), "non-finite backlog"
+    print(f"# wrote {path} ({len(data['configs'])} configs)")
+
+
+if __name__ == "__main__":
+    main()

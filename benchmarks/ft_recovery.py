@@ -4,13 +4,22 @@ Monte-Carlo over host failures in 2-pod recovery groups with background
 traffic and stragglers: predicted regeneration time per scheme, speedup vs
 uniform STAR, and planning latency — the deployment-shaped version of the
 paper's Fig. 6/7 evaluation (DESIGN.md §3).
+
+Planning runs on the batched engine (``repro.core.batched``): all trial
+overlays are sampled first, then each scheme plans the whole batch in one
+call.  ``run(engine="scalar")`` keeps the original per-overlay loop as the
+correctness oracle; the sampled overlay sequence is identical in both
+modes, so the mean times agree to batched-vs-scalar precision (~1e-12).
 """
 from __future__ import annotations
 
 import random
 import time
 
-from repro.core import CodeParams, plan_fr, plan_ftr, plan_star, plan_tr
+import numpy as np
+
+from repro.core import (BATCHED_SCHEMES, CodeParams, caps_tensor,
+                        plan_fr, plan_ftr, plan_star, plan_tr)
 from repro.ft import Fleet, FleetConfig, choose_providers
 
 from .common import quick_mode, row, save_artifact
@@ -18,30 +27,42 @@ from .common import quick_mode, row, save_artifact
 SCHEMES = {"star": plan_star, "fr": plan_fr, "tr": plan_tr, "ftr": plan_ftr}
 
 
-def run():
+def run(engine: str = "batched"):
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}")
     quick = quick_mode()
     trials = 10 if quick else 60
     params = CodeParams(n=8, k=4, d=6, M=64.0, alpha=16.0)
-    results = {}
+    results = {"engine": engine}
     for frac, tag in ((0.0, "healthy"), (0.15, "stragglers")):
         fleet = Fleet(FleetConfig(num_pods=2, hosts_per_pod=16,
                                   straggler_fraction=frac), seed=1)
         rng = random.Random(2)
-        acc = {s: 0.0 for s in SCHEMES}
-        plan_ms = {s: 0.0 for s in SCHEMES}
+        overlays = []
         for _ in range(trials):
             group = rng.sample(range(fleet.num_hosts), params.n)
             failed = rng.choice(group)
             survivors = [h for h in group if h != failed]
             providers = choose_providers(fleet, survivors, failed, params.d,
                                          rng=rng)
-            overlay = fleet.snapshot_overlay(failed, providers, block_mb=64.0,
-                                             rng=rng)
-            for name, planner in SCHEMES.items():
+            overlays.append(fleet.snapshot_overlay(failed, providers,
+                                                   block_mb=64.0, rng=rng))
+        acc = {s: 0.0 for s in SCHEMES}
+        plan_ms = {s: 0.0 for s in SCHEMES}
+        if engine == "batched":
+            caps = caps_tensor(overlays)
+            for name in SCHEMES:
                 t0 = time.perf_counter()
-                plan = planner(overlay, params)
-                plan_ms[name] += (time.perf_counter() - t0) * 1e3
-                acc[name] += plan.time
+                res = BATCHED_SCHEMES[name](caps, params)
+                plan_ms[name] = (time.perf_counter() - t0) * 1e3
+                acc[name] = float(np.sum(res.times))
+        else:
+            for overlay in overlays:
+                for name, planner in SCHEMES.items():
+                    t0 = time.perf_counter()
+                    plan = planner(overlay, params)
+                    plan_ms[name] += (time.perf_counter() - t0) * 1e3
+                    acc[name] += plan.time
         results[tag] = {s: acc[s] / trials for s in SCHEMES}
         results[tag + "_plan_ms"] = {s: plan_ms[s] / trials for s in SCHEMES}
     save_artifact("ft_recovery", results)

@@ -18,11 +18,18 @@ Modules:
   fig10_rctree    — Fig. 10 (RCTREE MDS collapse, data-plane RLNC sim)
   kernel_gf       — GF(2^8) Pallas kernel cost model + timings
   ft_recovery     — beyond-paper: checkpoint-recovery planning on TPU fleet
+  fleet_scale     — beyond-paper: event-driven fleet simulator sweep
   roofline        — reads the dry-run artifacts (launch/dryrun.py) if present
+
+One root seed (``BENCH_SEED``, default 0) is threaded into every module
+whose ``run`` accepts ``root_seed`` — the fleet sweep derives all of its
+scenario seeds from it, which is what makes ``BENCH_fleet.json`` bitwise
+reproducible across runs on the same machine.
 """
 from __future__ import annotations
 
 import importlib
+import inspect
 import json
 import os
 import sys
@@ -35,6 +42,7 @@ MODULES = [
     "fig10_rctree",
     "kernel_gf",
     "ft_recovery",
+    "fleet_scale",
     "roofline",
 ]
 
@@ -82,6 +90,7 @@ def _write_planning_summary(rows_by_module: dict) -> None:
 
 def main() -> None:
     print("name,us_per_call,derived")
+    root_seed = int(os.environ.get("BENCH_SEED", "0"))
     failures = []
     rows_by_module: dict = {}
     for mod_name in MODULES:
@@ -92,7 +101,10 @@ def main() -> None:
                 continue  # optional module not built yet
             raise
         try:
-            rows = list(mod.run())
+            kwargs = ({"root_seed": root_seed}
+                      if "root_seed" in inspect.signature(mod.run).parameters
+                      else {})
+            rows = list(mod.run(**kwargs))
             rows_by_module[mod_name] = rows
             for r in rows:
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

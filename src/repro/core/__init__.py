@@ -53,8 +53,8 @@ __all__ += ["plan_multi_failures", "store_and_forward_time",
 from .batched import (BATCHED_SCHEMES, BatchPlanResult, caps_tensor,
                       minmax_time_star_batch, plan_batch, plan_fr_batch,
                       plan_ftr_batch, plan_star_batch, plan_tr_batch,
-                      tree_optimal_time_batch)
+                      plans_from_batch, tree_optimal_time_batch)
 __all__ += ["BATCHED_SCHEMES", "BatchPlanResult", "caps_tensor",
             "minmax_time_star_batch", "plan_batch", "plan_fr_batch",
             "plan_ftr_batch", "plan_star_batch", "plan_tr_batch",
-            "tree_optimal_time_batch"]
+            "plans_from_batch", "tree_optimal_time_batch"]

@@ -1,0 +1,29 @@
+"""Fleet simulator: event-driven cluster regeneration under contention.
+
+The paper evaluates one regeneration at a time on one sampled overlay; a
+production fleet repairs continuously, and concurrent regenerations share
+the same heterogeneous links.  This package simulates an n-slot
+erasure-coded cluster over simulated time — Poisson (optionally
+rack-correlated) failures, a repair queue, fair-share link contention,
+pluggable per-repair scheme policies backed by the batched planning
+engine — and reports fleet metrics (backlog, p50/p99 regeneration time
+under contention, window of vulnerability, MTTDL estimate) that
+single-repair Monte Carlo cannot produce.  See src/README.md for the
+architecture and ``benchmarks/fleet_scale.py`` for the sweep driver.
+"""
+from .cluster import ClusterState, FAILED, HEALTHY, REPAIRING
+from .events import Event, EventQueue
+from .metrics import FleetMetrics
+from .policy import FixedPolicy, FlexiblePolicy, RepairPolicy, make_policy
+from .scenario import (SCENARIOS, Scenario, capacity_weather, hot_reads,
+                       rack_bursts, steady, tiered, tiered_capacities)
+from .sharing import ActiveRepair, LinkShareModel, plan_links
+from .sim import FleetSimulator, simulate
+
+__all__ = [
+    "ActiveRepair", "ClusterState", "Event", "EventQueue", "FAILED",
+    "FleetMetrics", "FleetSimulator", "FixedPolicy", "FlexiblePolicy",
+    "HEALTHY", "LinkShareModel", "REPAIRING", "RepairPolicy", "SCENARIOS",
+    "Scenario", "capacity_weather", "hot_reads", "make_policy", "plan_links",
+    "rack_bursts", "simulate", "steady", "tiered", "tiered_capacities",
+]

@@ -1,0 +1,85 @@
+"""Cluster state: node health, rack placement, and the live capacity matrix.
+
+Node identity is a *slot*: when slot ``x`` fails, a replacement host takes
+the same slot, so the directed capacity matrix keeps its shape for the whole
+simulation and plans map onto physical links by plain index pairs.
+
+States form a 3-way machine per slot::
+
+    HEALTHY --fail--> FAILED (queued) --start_repair--> REPAIRING
+       ^                                                    |
+       +---------------- complete_repair -------------------+
+
+A REPAIRING slot that loses a provider reverts to FAILED (requeued by the
+simulator).  ``unavailable`` counts FAILED + REPAIRING slots — an (n, k) MDS
+code loses data when that exceeds n - k, i.e. fewer than k slots are
+HEALTHY.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+HEALTHY, FAILED, REPAIRING = 0, 1, 2
+
+
+class ClusterState:
+    """n storage slots over a mutable directed capacity matrix."""
+
+    def __init__(self, caps: np.ndarray, rack_size: int = 0):
+        caps = np.asarray(caps, dtype=np.float64)
+        if caps.ndim != 2 or caps.shape[0] != caps.shape[1]:
+            raise ValueError("caps must be a square (n, n) matrix")
+        if (caps < 0).any():
+            raise ValueError("link capacities must be non-negative")
+        self.caps = caps.copy()
+        np.fill_diagonal(self.caps, 0.0)
+        self.n = caps.shape[0]
+        self.rack_size = rack_size
+        self.state = np.zeros(self.n, dtype=np.int8)
+
+    # -- placement ----------------------------------------------------------
+
+    def rack_of(self, node: int) -> int:
+        return node // self.rack_size if self.rack_size > 0 else 0
+
+    def rack_peers(self, node: int) -> List[int]:
+        if self.rack_size <= 0:
+            return []
+        r = self.rack_of(node)
+        return [x for x in range(self.n)
+                if x != node and self.rack_of(x) == r]
+
+    # -- health -------------------------------------------------------------
+
+    def healthy_nodes(self) -> List[int]:
+        return [int(x) for x in np.flatnonzero(self.state == HEALTHY)]
+
+    @property
+    def num_healthy(self) -> int:
+        return int((self.state == HEALTHY).sum())
+
+    @property
+    def num_unavailable(self) -> int:
+        return self.n - self.num_healthy
+
+    def fail(self, node: int) -> None:
+        if self.state[node] != HEALTHY:
+            raise ValueError(f"node {node} is not healthy")
+        self.state[node] = FAILED
+
+    def start_repair(self, node: int) -> None:
+        if self.state[node] != FAILED:
+            raise ValueError(f"node {node} is not awaiting repair")
+        self.state[node] = REPAIRING
+
+    def abort_repair(self, node: int) -> None:
+        if self.state[node] != REPAIRING:
+            raise ValueError(f"node {node} is not under repair")
+        self.state[node] = FAILED
+
+    def complete_repair(self, node: int) -> None:
+        if self.state[node] != REPAIRING:
+            raise ValueError(f"node {node} is not under repair")
+        self.state[node] = HEALTHY

@@ -1,0 +1,96 @@
+"""Pluggable repair policies: which scheme plans each regeneration.
+
+A policy receives the residual-capacity overlays of *every* repair starting
+at the current event epoch as one ``(R, d+1, d+1)`` tensor and returns one
+:class:`RepairPlan` per repair.  This batch-shaped interface is what lets
+the PR-1 batched planning engine serve as the decision core: a fixed policy
+plans all R repairs with one ``plan_batch`` call, and the flexible policy
+plans all R repairs under *every* candidate scheme (one batched call per
+scheme) and picks, per repair, the fastest plan under the residual
+capacities — the fleet-scale version of the paper's "choose the scheme
+that minimizes regeneration time" message.
+
+The residual overlays are a *same-epoch snapshot*: repairs admitted at one
+event epoch are planned against the shares left by already-active work,
+not against each other (planning them jointly would serialize the batch).
+Once they start, the fair-share model charges them for each other anyway,
+so a same-epoch batch that collides on a link runs slower than its plans
+predicted — the simulator's contention signal, not a planning error.
+
+Custom policies only need ``plan_batch`` (see tests/test_fleet.py for a
+crafted-plan policy used to validate the link-sharing model), so anything
+from an RL agent to an LP-based global scheduler can plug in.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
+                        RepairPlan, SCHEMES, plan_batch, plans_from_batch)
+
+
+class RepairPolicy:
+    """Interface: plan a batch of repairs under residual capacities."""
+
+    name = "abstract"
+
+    def plan_batch(self, caps: np.ndarray, params: CodeParams,
+                   ) -> List[RepairPlan]:
+        raise NotImplementedError
+
+
+class FixedPolicy(RepairPolicy):
+    """Always the same scheme (star / fr / tr / ftr / shah / rctree).
+
+    Schemes with a batched planner go through :func:`plan_batch`; the rest
+    fall back to the scalar planner per overlay.
+    """
+
+    def __init__(self, scheme: str):
+        if scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {scheme!r}; "
+                             f"available: {sorted(SCHEMES)}")
+        self.scheme = scheme
+        self.name = scheme
+
+    def plan_batch(self, caps: np.ndarray, params: CodeParams,
+                   ) -> List[RepairPlan]:
+        if self.scheme in BATCHED_SCHEMES:
+            return plans_from_batch(plan_batch(caps, params, self.scheme),
+                                    params)
+        return [SCHEMES[self.scheme](OverlayNetwork(c.tolist()), params)
+                for c in caps]
+
+
+class FlexiblePolicy(RepairPolicy):
+    """Plan every candidate scheme in one batched call each; per repair,
+    keep the plan with the smallest regeneration time under the residual
+    capacities.  Ties break toward the earlier scheme in ``schemes`` (the
+    default order prefers ftr), keeping the choice deterministic.
+    """
+
+    name = "flexible"
+
+    def __init__(self, schemes: Sequence[str] = ("ftr", "tr", "fr", "star")):
+        unknown = [s for s in schemes if s not in BATCHED_SCHEMES]
+        if unknown:
+            raise ValueError(f"flexible policy needs batched planners; "
+                             f"none for {unknown}")
+        self.schemes: Tuple[str, ...] = tuple(schemes)
+
+    def plan_batch(self, caps: np.ndarray, params: CodeParams,
+                   ) -> List[RepairPlan]:
+        per_scheme = [plans_from_batch(plan_batch(caps, params, s), params)
+                      for s in self.schemes]
+        times = np.array([[p.time for p in plans] for plans in per_scheme])
+        winner = np.argmin(times, axis=0)       # first minimum wins ties
+        return [per_scheme[int(winner[r])][r] for r in range(caps.shape[0])]
+
+
+def make_policy(spec: str) -> RepairPolicy:
+    """'flexible' or a fixed scheme name — the CLI/bench entry point."""
+    if spec == "flexible":
+        return FlexiblePolicy()
+    return FixedPolicy(spec)

@@ -1,0 +1,153 @@
+"""Scenario layer: failure processes, capacity models, and load, composed.
+
+A :class:`Scenario` is pure configuration — everything stochastic is drawn
+inside the simulator from named child streams of one root seed, so a
+scenario replayed with the same seed is bitwise reproducible.
+
+Capacity models reuse the repo's existing samplers rather than inventing
+new ones: ``repro.storage.capacities.uniform_matrix`` gives the paper's
+PlanetLab-style i.i.d. regime at cluster scale, and ``tiered_capacities``
+wraps ``repro.ft.topology.Fleet`` so the TPU-fleet two-tier (intra-pod /
+cross-pod DCN + stragglers) topology drives fleet simulations too.
+
+``SCENARIOS`` is the library the benchmarks sweep: steady-state Poisson
+churn, rack-correlated failure bursts, capacity weather (periodic
+background-traffic shocks), and degraded-read pressure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.storage.capacities import ClusterCapSampler, uniform_matrix
+
+
+def tiered_capacities(num_pods: int = 2, hosts_per_pod: int = 0,
+                      block_mb: float = 64.0,
+                      straggler_fraction: float = 0.05,
+                      ) -> ClusterCapSampler:
+    """TPU-fleet two-tier capacities via ``repro.ft.topology.Fleet``.
+
+    ``hosts_per_pod = 0`` derives the pod size from the cluster size n at
+    sample time (ceil(n / num_pods)).  The Fleet's straggler assignment is
+    seeded from the scenario's capacity stream, keeping determinism.
+    """
+
+    def sample(rng: np.random.Generator, n: int) -> np.ndarray:
+        from repro.ft import Fleet, FleetConfig
+
+        hpp = hosts_per_pod or -(-n // num_pods)
+        fleet = Fleet(FleetConfig(num_pods=num_pods, hosts_per_pod=hpp,
+                                  straggler_fraction=straggler_fraction),
+                      seed=int(rng.integers(1 << 31)))
+        return np.asarray(
+            fleet.capacity_matrix(list(range(n)), block_mb=block_mb, rng=rng))
+
+    return sample
+
+
+# (failed slot, healthy nodes, rng) -> provider ids; None = uniform sample
+ProviderPicker = Callable[[int, List[int], np.random.Generator], List[int]]
+
+# (time, node) pairs injected on top of / instead of the Poisson process
+InjectedFailure = Tuple[float, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Composable description of a fleet workload.
+
+    Rates are per *second* of simulated time; capacities are blocks/sec as
+    everywhere else in the repo.
+    """
+
+    num_nodes: int
+    duration: float
+    # -- failure process ----------------------------------------------------
+    failure_rate: float = 0.0         # per healthy node, Poisson
+    rack_size: int = 0                # 0 = no rack structure
+    rack_burst_prob: float = 0.0      # P(failure is a correlated rack burst)
+    rack_burst_extra: int = 1         # extra victims per burst, same rack
+    failures: Tuple[InjectedFailure, ...] = ()   # deterministic injections
+    # -- capacities ---------------------------------------------------------
+    capacity_model: ClusterCapSampler = uniform_matrix()
+    shock_period: float = 0.0         # 0 = static capacities
+    shock_lo: float = 1.0             # per-link multiplier bounds applied to
+    shock_hi: float = 1.0             # the base matrix at every shock
+    # -- degraded-read load -------------------------------------------------
+    read_rate: float = 0.0            # arrivals/sec while any slot is down
+    read_duration: float = 1.0        # seconds each read occupies its links
+    read_fanin: int = 0               # links per read; 0 = params.k
+    # -- repair admission ---------------------------------------------------
+    max_concurrent: int = 4
+    provider_picker: Optional[ProviderPicker] = None
+
+    def __post_init__(self):
+        if self.num_nodes < 2:
+            raise ValueError("need at least 2 nodes")
+        if self.duration <= 0:
+            raise ValueError("duration must be positive")
+        if self.shock_period < 0 or self.failure_rate < 0 or self.read_rate < 0:
+            raise ValueError("rates/periods must be non-negative")
+        if self.read_duration <= 0:
+            raise ValueError("read_duration must be positive")
+        if self.shock_lo < 0 or self.shock_hi < self.shock_lo:
+            raise ValueError("need 0 <= shock_lo <= shock_hi")
+
+
+# ---------------------------------------------------------------------------
+# Scenario library (n-parameterized factories the benchmarks sweep)
+# ---------------------------------------------------------------------------
+
+def steady(n: int, failure_rate: float = 2e-3,
+           duration: float = 20_000.0) -> Scenario:
+    """Steady Poisson churn over static PlanetLab-style capacities."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate)
+
+
+def rack_bursts(n: int, failure_rate: float = 2e-3,
+                duration: float = 20_000.0) -> Scenario:
+    """Rack-correlated bursts: 30% of failures take out a rack neighbour
+    too, stressing the window-of-vulnerability accounting."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    rack_size=max(n // 4, 2), rack_burst_prob=0.3,
+                    rack_burst_extra=1)
+
+
+def capacity_weather(n: int, failure_rate: float = 2e-3,
+                     duration: float = 20_000.0) -> Scenario:
+    """Background-traffic weather: every 500 s each link's capacity is
+    rescaled by an independent U[0.25, 1] multiplier."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    shock_period=500.0, shock_lo=0.25, shock_hi=1.0)
+
+
+def hot_reads(n: int, failure_rate: float = 2e-3,
+              duration: float = 20_000.0) -> Scenario:
+    """Degraded-read pressure: while any slot is down, reconstruction reads
+    arrive and contend with repairs for the same links."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    read_rate=0.05, read_duration=20.0)
+
+
+def tiered(n: int, failure_rate: float = 2e-3,
+           duration: float = 20_000.0) -> Scenario:
+    """TPU-fleet tiered capacities (repro.ft.topology) under steady churn."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    capacity_model=tiered_capacities())
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "steady": steady,
+    "rack_bursts": rack_bursts,
+    "capacity_weather": capacity_weather,
+    "hot_reads": hot_reads,
+    "tiered": tiered,
+}

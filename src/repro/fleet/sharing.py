@@ -1,0 +1,161 @@
+"""Fair-share model for directed links used by concurrent regenerations.
+
+Every active repair (and every phantom degraded-read stream) *occupies* the
+directed physical links its plan sends data over.  A link of capacity ``c``
+with ``m`` occupants gives each of them the fair share ``c / m`` — the fluid
+approximation of per-flow max-min fairness on independent links.  Repair
+progress is store-and-forward over the plan tree, so a repair's *nominal
+duration* under the current shares is
+
+    T = max over plan edges e of  f_e / share(link(e))
+
+exactly the paper's regeneration-time expression with capacities replaced
+by shares.  Between events a repair advances at rate ``1 / T`` of its total
+work; the simulator integrates the remaining-work fraction piecewise.
+
+Consequences the tests pin down (tests/test_fleet.py):
+
+* a lone repair sees full capacities — its fleet time equals ``plan.time``;
+* repairs over disjoint links do not affect each other at all;
+* two plans bottlenecked on one shared saturated link each see ``c / 2``
+  and slow down by exactly 2x while they overlap.
+
+All divisions are guarded: a zero-capacity link yields an ``inf`` nominal
+duration (the repair stalls, matching ``plan_time``'s convention), never a
+ZeroDivisionError; flows below ``FLOW_EPS`` occupy nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import RepairPlan
+
+Link = Tuple[int, int]          # directed physical link (src node, dst node)
+
+FLOW_EPS = 1e-12                # flows at/below this occupy no link
+
+
+def plan_links(plan: RepairPlan, ids: Sequence[int],
+               ) -> List[Tuple[Link, float]]:
+    """Map a plan's tree edges onto physical links.
+
+    ``ids[i]`` is the cluster node standing at overlay index ``i`` (index 0
+    = the replacement/newcomer).  Edges with negligible flow are dropped —
+    they move no data and must not claim a share.
+    """
+    out: List[Tuple[Link, float]] = []
+    for (u, v), f in plan.flows.items():
+        if f > FLOW_EPS:
+            out.append(((ids[u], ids[v]), float(f)))
+    return out
+
+
+@dataclasses.dataclass
+class ActiveRepair:
+    """A regeneration in flight.
+
+    ``remaining`` is the fraction of total work left (1 at start);
+    ``nominal`` is the duration the whole repair would take at the *current*
+    shares.  Time to finish right now is ``remaining * nominal``.
+    """
+
+    node: int                           # slot being regenerated
+    plan: RepairPlan
+    ids: List[int]                      # overlay index -> cluster node
+    links: List[Tuple[Link, float]]     # physical link -> flow on it
+    fail_time: float
+    start_time: float
+    remaining: float = 1.0
+    nominal: float = math.inf
+
+    @property
+    def providers(self) -> List[int]:
+        return list(self.ids[1:])
+
+    def eta(self) -> float:
+        if self.remaining <= 0.0:
+            return 0.0
+        return self.remaining * self.nominal
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"negative time step {dt}")
+        if math.isfinite(self.nominal) and self.nominal > 0:
+            self.remaining = max(0.0, self.remaining - dt / self.nominal)
+        elif self.nominal == 0.0:       # degenerate all-tiny-flow plan
+            self.remaining = 0.0
+
+
+class LinkShareModel:
+    """Occupancy ledger over the cluster's directed capacity matrix.
+
+    Holds a *reference* to ``caps`` so capacity shocks (the simulator
+    rescales the matrix in place) are seen by the next ``recompute``.
+    """
+
+    def __init__(self, caps: np.ndarray):
+        self.caps = caps
+        self.users: Dict[Link, int] = {}
+
+    def acquire(self, links: Sequence[Tuple[Link, float]]) -> None:
+        for link, _ in links:
+            self.users[link] = self.users.get(link, 0) + 1
+
+    def release(self, links: Sequence[Tuple[Link, float]]) -> None:
+        for link, _ in links:
+            m = self.users.get(link, 0) - 1
+            if m > 0:
+                self.users[link] = m
+            else:
+                self.users.pop(link, None)
+
+    def share(self, link: Link) -> float:
+        """Bandwidth each current occupant of ``link`` receives."""
+        c = float(self.caps[link])
+        m = max(self.users.get(link, 0), 1)
+        return c / m
+
+    def residual(self, link: Link) -> float:
+        """Bandwidth a *new* occupant of ``link`` would receive."""
+        c = float(self.caps[link])
+        return c / (self.users.get(link, 0) + 1)
+
+    def residual_overlay(self, ids: Sequence[int]) -> np.ndarray:
+        """(d+1, d+1) overlay capacity matrix for planning a new repair.
+
+        Entry [i, j] is the fair share a new flow on physical link
+        (ids[i], ids[j]) would get — the "current residual capacity" the
+        flexible policy plans under.
+        """
+        idx = np.asarray(ids)
+        cap = self.caps[np.ix_(idx, idx)].copy()
+        np.fill_diagonal(cap, 0.0)
+        for i, u in enumerate(idx):
+            for j, v in enumerate(idx):
+                if i != j:
+                    m = self.users.get((int(u), int(v)), 0)
+                    if m:
+                        cap[i, j] /= (m + 1)
+        return cap
+
+    def nominal_time(self, links: Sequence[Tuple[Link, float]]) -> float:
+        """Store-and-forward duration of a plan at the current shares."""
+        t = 0.0
+        for link, f in links:
+            if f <= FLOW_EPS:
+                continue
+            s = self.share(link)
+            if s <= 0.0:
+                return math.inf
+            t = max(t, f / s)
+        return t
+
+    def recompute(self, active: Sequence[ActiveRepair]) -> None:
+        """Refresh every active repair's nominal duration (call after any
+        arrival, departure, or capacity change)."""
+        for r in active:
+            r.nominal = self.nominal_time(r.links)

@@ -1,0 +1,296 @@
+"""Discrete-event fleet simulator: concurrent regenerations over shared links.
+
+The loop advances between events; repairs progress as fluid flows whose
+rates are set by the fair-share link model (``sharing.py``).  Exogenous
+events (failures, capacity shocks, degraded reads) live on a heap; repair
+completions are *derived* each iteration from (remaining work x current
+nominal duration), so share changes mid-repair are handled exactly — a
+regeneration's duration emerges from contention instead of being read off
+its plan.
+
+Per event epoch, every repair that can start (queued slot, >= d healthy
+providers, concurrency budget left) is planned in ONE call to the policy
+with a stacked tensor of residual-capacity overlays — this is where the
+PR-1 batched planning engine runs in throughput mode (many concurrent
+repairs per call) rather than Monte-Carlo mode.
+
+Failure model details:
+
+* Poisson failures at ``failure_rate`` per healthy node; the aggregate
+  exponential clock is re-drawn whenever the healthy population changes
+  (memorylessness makes this exact for the Markov process).
+* A failed slot's repair regenerates onto a replacement host in the same
+  slot, so the capacity matrix is stable across repairs.
+* If an active repair loses a provider to a new failure, it aborts: its
+  links are released, its work is lost, and the slot is requeued with its
+  original failure time (the vulnerability window keeps accruing).
+* Data-loss accounting: every failure that leaves fewer than k healthy
+  slots is a loss event; ``FleetMetrics`` additionally integrates the
+  conditional ruin intensity for an MTTDL estimate that works at sane
+  failure rates.
+
+Determinism: one root ``seed`` spawns named child streams (capacities,
+failures, providers, reads, shocks) via ``np.random.default_rng([seed,
+stream])``, and all same-time events have fixed precedence (completions,
+then heap order, then the Poisson clock), so a run is bitwise reproducible.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import CodeParams
+
+from .cluster import ClusterState
+from .events import (CAPACITY_SHOCK, Event, EventQueue, FAILURE,
+                     READ_ARRIVAL, READ_DEPARTURE)
+from .metrics import FleetMetrics
+from .policy import RepairPolicy
+from .scenario import Scenario
+from .sharing import ActiveRepair, LinkShareModel, plan_links
+
+_STREAMS = {"caps": 0, "fail": 1, "prov": 2, "read": 3, "shock": 4}
+
+
+class FleetSimulator:
+    """Simulate ``scenario`` under ``policy`` for one (n, k, d) code."""
+
+    def __init__(self, scenario: Scenario, policy: RepairPolicy,
+                 params: CodeParams, seed: int = 0):
+        if params.d > scenario.num_nodes - 1:
+            raise ValueError(
+                f"d={params.d} providers need a cluster of > d nodes, "
+                f"got {scenario.num_nodes}")
+        self.scenario = scenario
+        self.policy = policy
+        self.params = params
+        self.seed = seed
+        self.rng = {name: np.random.default_rng([seed, sid])
+                    for name, sid in _STREAMS.items()}
+
+        n = scenario.num_nodes
+        base = np.asarray(scenario.capacity_model(self.rng["caps"], n),
+                          dtype=np.float64)
+        self.cluster = ClusterState(base, rack_size=scenario.rack_size)
+        self.caps_base = self.cluster.caps.copy()
+        self.shares = LinkShareModel(self.cluster.caps)
+
+        self.now = 0.0
+        self.queue: List[Tuple[float, int]] = []    # (fail_time, slot) FIFO
+        self.active: List[ActiveRepair] = []        # kept in start order
+        self.reads: dict = {}
+        self._read_seq = 0
+
+        self.events = EventQueue()
+        for t, node in sorted(scenario.failures):
+            self.events.push(Event(t, FAILURE, (node,)))
+        if scenario.shock_period > 0:
+            self.events.push(Event(scenario.shock_period, CAPACITY_SHOCK))
+        if scenario.read_rate > 0:
+            self.events.push(Event(
+                float(self.rng["read"].exponential(1.0 / scenario.read_rate)),
+                READ_ARRIVAL))
+        self.next_fail = self._draw_next_fail()
+
+        self.metrics = FleetMetrics(n=n, k=params.k,
+                                    failure_rate=scenario.failure_rate)
+
+    # -- stochastic clocks --------------------------------------------------
+
+    def _draw_next_fail(self) -> float:
+        rate = self.scenario.failure_rate * self.cluster.num_healthy
+        if rate <= 0:
+            return math.inf
+        return self.now + float(self.rng["fail"].exponential(1.0 / rate))
+
+    # -- event handlers -----------------------------------------------------
+
+    def _apply_failure(self, node: int) -> None:
+        if self.cluster.state[node] != 0:       # already failed / repairing
+            return
+        self.cluster.fail(node)
+        if self.cluster.num_healthy < self.params.k:
+            self.metrics.on_data_loss()
+        self.queue.append((self.now, node))
+        # abort in-flight repairs that lost a provider
+        lost = [i for i, r in enumerate(self.active) if node in r.providers]
+        for i in reversed(lost):
+            r = self.active.pop(i)
+            self.shares.release(r.links)
+            self.cluster.abort_repair(r.node)
+            self.queue.append((r.fail_time, r.node))
+            self.metrics.on_abort()
+        if lost:
+            # requeued aborts carry older fail_times than the failure that
+            # evicted them; restore oldest-first admission order (stable on
+            # ties, so same-time entries keep insertion order)
+            self.queue.sort(key=lambda item: item[0])
+
+    def _poisson_failure(self) -> None:
+        healthy = self.cluster.healthy_nodes()
+        if healthy:
+            victim = int(self.rng["fail"].choice(len(healthy)))
+            victims = [healthy[victim]]
+            sc = self.scenario
+            if (sc.rack_size > 0 and sc.rack_burst_prob > 0
+                    and self.rng["fail"].random() < sc.rack_burst_prob):
+                peers = [p for p in self.cluster.rack_peers(victims[0])
+                         if self.cluster.state[p] == 0]
+                extra = min(sc.rack_burst_extra, len(peers))
+                if extra:
+                    idx = self.rng["fail"].choice(len(peers), size=extra,
+                                                  replace=False)
+                    victims += [peers[int(i)] for i in idx]
+            for v in victims:
+                self._apply_failure(v)
+        self.next_fail = self._draw_next_fail()
+
+    def _capacity_shock(self) -> None:
+        sc = self.scenario
+        n = sc.num_nodes
+        mult = self.rng["shock"].uniform(sc.shock_lo, sc.shock_hi,
+                                         size=(n, n))
+        self.cluster.caps[:] = self.caps_base * mult
+        np.fill_diagonal(self.cluster.caps, 0.0)
+        self.events.push(Event(self.now + sc.shock_period, CAPACITY_SHOCK))
+
+    def _read_arrival(self) -> None:
+        sc = self.scenario
+        healthy = self.cluster.healthy_nodes()
+        fanin = sc.read_fanin or self.params.k
+        if self.cluster.num_unavailable > 0 and len(healthy) > fanin:
+            dst_i = int(self.rng["read"].choice(len(healthy)))
+            dst = healthy[dst_i]
+            pool = [h for h in healthy if h != dst]
+            idx = self.rng["read"].choice(len(pool), size=fanin,
+                                          replace=False)
+            links = [((pool[int(i)], dst), 1.0) for i in idx]
+            self.shares.acquire(links)
+            rid = self._read_seq
+            self._read_seq += 1
+            self.reads[rid] = links
+            self.events.push(Event(self.now + sc.read_duration,
+                                   READ_DEPARTURE, (rid,)))
+        self.events.push(Event(
+            self.now + float(self.rng["read"].exponential(1.0 / sc.read_rate)),
+            READ_ARRIVAL))
+
+    def _read_departure(self, rid: int) -> None:
+        links = self.reads.pop(rid, None)
+        if links is not None:
+            self.shares.release(links)
+
+    # -- repair admission ---------------------------------------------------
+
+    def _pick_providers(self, failed: int, healthy: List[int]) -> List[int]:
+        if self.scenario.provider_picker is not None:
+            return list(self.scenario.provider_picker(failed, healthy,
+                                                      self.rng["prov"]))
+        idx = self.rng["prov"].choice(len(healthy), size=self.params.d,
+                                      replace=False)
+        return [healthy[int(i)] for i in idx]
+
+    def _drain_queue(self) -> None:
+        """Start every currently-startable repair, planned as one batch."""
+        startable: List[Tuple[float, int, List[int]]] = []
+        while (self.queue
+               and len(self.active) + len(startable)
+               < self.scenario.max_concurrent):
+            healthy = self.cluster.healthy_nodes()
+            if len(healthy) < self.params.d:
+                break
+            fail_t, node = self.queue.pop(0)
+            self.cluster.start_repair(node)
+            ids = [node] + self._pick_providers(node, healthy)
+            if len(set(ids)) != self.params.d + 1:
+                raise ValueError(
+                    f"provider picker returned {ids[1:]} for slot {node}: "
+                    f"need {self.params.d} distinct providers != the slot")
+            startable.append((fail_t, node, ids))
+        if not startable:
+            return
+        overlays = np.stack([self.shares.residual_overlay(ids)
+                             for _, _, ids in startable])
+        plans = self.policy.plan_batch(overlays, self.params)
+        for (fail_t, node, ids), plan in zip(startable, plans):
+            links = plan_links(plan, ids)
+            self.shares.acquire(links)
+            self.active.append(ActiveRepair(
+                node=node, plan=plan, ids=list(ids), links=links,
+                fail_time=fail_t, start_time=self.now))
+
+    # -- main loop ----------------------------------------------------------
+
+    def _next_completion(self) -> Tuple[float, int]:
+        """(absolute time, index into self.active) of the earliest finishing
+        repair; on ties the strict < keeps the first hit, and ``active`` is
+        in start order, so the earliest-started repair wins."""
+        best_t, best_i = math.inf, -1
+        for i, r in enumerate(self.active):
+            t = self.now + r.eta()
+            if t < best_t:
+                best_t, best_i = t, i
+        return best_t, best_i
+
+    def _advance(self, t: float) -> None:
+        dt = t - self.now
+        for r in self.active:
+            r.advance(dt)
+        self.now = t
+        self.metrics.observe(t, len(self.queue) + len(self.active),
+                             self.cluster.num_unavailable)
+
+    def _complete(self, i: int) -> None:
+        r = self.active.pop(i)
+        r.remaining = 0.0
+        self.shares.release(r.links)
+        self.cluster.complete_repair(r.node)
+        self.metrics.on_complete(r.fail_time, r.start_time, self.now)
+        # the healthy population grew: re-draw the aggregate failure clock
+        # (memorylessness makes the re-draw exact, same as on failures)
+        self.next_fail = self._draw_next_fail()
+
+    def run(self) -> FleetMetrics:
+        end = self.scenario.duration
+        self.metrics.observe(0.0, len(self.queue) + len(self.active),
+                             self.cluster.num_unavailable)
+        self._drain_queue()
+        self.shares.recompute(self.active)
+        while True:
+            t_comp, ci = self._next_completion()
+            t_exo = self.events.peek_time()
+            t_next = min(t_comp, t_exo, self.next_fail)
+            if t_next > end or not math.isfinite(t_next):
+                self._advance(end)
+                break
+            self._advance(t_next)
+            # fixed same-time precedence: completion, heap, Poisson clock
+            if t_comp <= t_exo and t_comp <= self.next_fail:
+                self._complete(ci)
+            elif t_exo <= self.next_fail:
+                ev = self.events.pop()
+                if ev.kind == FAILURE:
+                    self._apply_failure(ev.payload[0])
+                    self.next_fail = self._draw_next_fail()
+                elif ev.kind == CAPACITY_SHOCK:
+                    self._capacity_shock()
+                elif ev.kind == READ_ARRIVAL:
+                    self._read_arrival()
+                elif ev.kind == READ_DEPARTURE:
+                    self._read_departure(ev.payload[0])
+            else:
+                self._poisson_failure()
+            self._drain_queue()
+            self.shares.recompute(self.active)
+            self.metrics.observe(self.now,
+                                 len(self.queue) + len(self.active),
+                                 self.cluster.num_unavailable)
+        return self.metrics
+
+
+def simulate(scenario: Scenario, policy: RepairPolicy, params: CodeParams,
+             seed: int = 0) -> dict:
+    """One-call entry point: run and return the metrics summary."""
+    return FleetSimulator(scenario, policy, params, seed=seed).run().summary()

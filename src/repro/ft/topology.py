@@ -63,21 +63,34 @@ class Fleet:
              else self.cfg.inter_pod_gbps)
         return c * self.straggle.get(u, 1.0)
 
+    def capacity_matrix(self, hosts: Sequence[int], block_mb: float = 1.0,
+                        rng=None) -> List[List[float]]:
+        """Available-bandwidth snapshot among ``hosts`` in blocks/sec.
+
+        Entry [i][j] is the current host[i] -> host[j] bandwidth: the tiered
+        base rate times a per-link background-load draw.  ``rng`` may be a
+        ``random.Random`` or a ``numpy.random.Generator`` (both expose
+        ``uniform(lo, hi)``); the fleet simulator passes the latter.  This
+        is the sampler both ``snapshot_overlay`` (single repair) and
+        ``repro.fleet``'s tiered scenario (whole cluster) are built on.
+        """
+        rng = rng if rng is not None else self.rng
+        m = len(hosts)
+        cap = [[0.0] * m for _ in range(m)]
+        for i, u in enumerate(hosts):
+            for j, v in enumerate(hosts):
+                if i == j:
+                    continue
+                avail = self.base_bw(u, v) * float(
+                    rng.uniform(self.cfg.load_lo, self.cfg.load_hi))
+                cap[i][j] = avail * 1000.0 / block_mb   # GB/s -> MB-blocks/s
+        return cap
+
     def snapshot_overlay(self, newcomer: int, providers: Sequence[int],
                          block_mb: float = 1.0,
                          rng: Optional[random.Random] = None,
                          ) -> OverlayNetwork:
         """Overlay in blocks/sec for a repair: node 0 = newcomer, 1..d =
         providers.  ``block_mb`` converts GB/s into block units."""
-        rng = rng or self.rng
         ids = [newcomer] + list(providers)
-        d = len(providers)
-        cap = [[0.0] * (d + 1) for _ in range(d + 1)]
-        for i, u in enumerate(ids):
-            for j, v in enumerate(ids):
-                if i == j:
-                    continue
-                avail = self.base_bw(u, v) * rng.uniform(self.cfg.load_lo,
-                                                         self.cfg.load_hi)
-                cap[i][j] = avail * 1000.0 / block_mb   # GB/s -> MB-blocks/s
-        return OverlayNetwork(cap)
+        return OverlayNetwork(self.capacity_matrix(ids, block_mb, rng))

@@ -1,7 +1,9 @@
 """Simulated distributed storage cluster (paper evaluation substrate)."""
-from .capacities import CapSampler, FIG7_DISTRIBUTIONS, uniform
+from .capacities import (CapSampler, ClusterCapSampler, FIG7_DISTRIBUTIONS,
+                         uniform, uniform_matrix)
 from .simulator import (RlncSimulator, SchemeStats, compare_schemes,
                         reconstruction_vs_rounds)
 
-__all__ = ["CapSampler", "FIG7_DISTRIBUTIONS", "uniform", "RlncSimulator",
-           "SchemeStats", "compare_schemes", "reconstruction_vs_rounds"]
+__all__ = ["CapSampler", "ClusterCapSampler", "FIG7_DISTRIBUTIONS",
+           "uniform", "uniform_matrix", "RlncSimulator", "SchemeStats",
+           "compare_schemes", "reconstruction_vs_rounds"]

@@ -1,17 +1,40 @@
-"""Link-capacity models for overlay networks.
+"""Link-capacity models for overlay networks and whole clusters.
 
 ``uniform`` reproduces the paper's evaluation setting (PlanetLab-derived
-U[10,120] Mbps, Section VI); the TPU-fleet model lives in ``repro.ft.topology``
-(deployment adaptation, DESIGN.md §3).
+U[10,120] Mbps, Section VI) for a single repair's (d+1)-node overlay; the
+TPU-fleet model lives in ``repro.ft.topology`` (deployment adaptation,
+DESIGN.md §3).
+
+``uniform_matrix`` is the cluster-scale analogue used by the fleet
+simulator (``repro.fleet``): it samples the full n x n directed capacity
+matrix once, so concurrent repairs planned at different times see the
+*same* physical link and contend on it — the property per-repair overlay
+sampling cannot express.
 """
 from __future__ import annotations
 
 import random
 from typing import Callable, List
 
+import numpy as np
+
 from repro.core import OverlayNetwork
 
 CapSampler = Callable[[random.Random, int], OverlayNetwork]
+
+# (numpy Generator, cluster size n) -> (n, n) directed capacities, diag 0
+ClusterCapSampler = Callable[[np.random.Generator, int], np.ndarray]
+
+
+def uniform_matrix(lo: float = 10.0, hi: float = 120.0) -> ClusterCapSampler:
+    """All n*(n-1) directed cluster links i.i.d. U[lo, hi] (blocks/sec)."""
+
+    def sample(rng: np.random.Generator, n: int) -> np.ndarray:
+        caps = rng.uniform(lo, hi, size=(n, n))
+        np.fill_diagonal(caps, 0.0)
+        return caps
+
+    return sample
 
 
 def uniform(lo: float = 10.0, hi: float = 120.0) -> CapSampler:

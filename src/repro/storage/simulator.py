@@ -16,13 +16,15 @@ import dataclasses
 import itertools
 import math
 import random
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.coding import GF, GF8, RLNC, CodedBlocks
 from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
-                        RepairPlan, caps_tensor, plan_time, SCHEMES)
+                        RepairPlan, caps_tensor, plan_batch, plan_time,
+                        plans_from_batch, SCHEMES)
 from .capacities import CapSampler
 
 
@@ -38,6 +40,21 @@ class SchemeStats:
     mean_traffic: float
     mean_norm_traffic: float
     plan_seconds: float        # mean planner wall time
+    engine: str = "scalar"     # engine that actually planned this scheme
+
+
+_warned_scalar_fallback: set = set()
+
+
+def _warn_scalar_fallback(scheme: str) -> None:
+    """One warning per scheme per process — not one per trial — when a
+    scheme silently rides the scalar path inside a batched run."""
+    if scheme not in _warned_scalar_fallback:
+        _warned_scalar_fallback.add(scheme)
+        warnings.warn(
+            f"compare_schemes(engine='batched'): no batched planner for "
+            f"{scheme!r}; falling back to the scalar path for all trials "
+            f"(see SchemeStats.engine)", RuntimeWarning, stacklevel=3)
 
 
 def compare_schemes(params: CodeParams, sampler: CapSampler,
@@ -66,9 +83,12 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
         for s in schemes:
             t0 = _time.perf_counter()
             if s in BATCHED_SCHEMES:
+                used = "batched"
                 res = BATCHED_SCHEMES[s](caps, params)
                 times, traffic = res.times, res.traffic
             else:  # scalar fallback for schemes not vectorized yet
+                used = "scalar"
+                _warn_scalar_fallback(s)
                 plans = [SCHEMES[s](net, params) for net in nets]
                 times = np.array([p.time for p in plans])
                 traffic = np.array([p.total_traffic for p in plans])
@@ -76,7 +96,8 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
             out[s] = SchemeStats(
                 s, float(times.mean()), float((times / base.times).mean()),
                 float(traffic.mean()),
-                float((traffic / base.traffic).mean()), dt / trials)
+                float((traffic / base.traffic).mean()), dt / trials,
+                engine=used)
         return out
 
     acc = {s: [0.0, 0.0, 0.0, 0.0, 0.0] for s in schemes}
@@ -108,11 +129,14 @@ class RlncSimulator:
 
     def __init__(self, params: CodeParams, field: GF = GF8,
                  block_bytes: int = 4, seed: int = 0,
-                 matmul: Optional[Callable] = None):
+                 matmul: Optional[Callable] = None, engine: str = "batched"):
         if abs(params.M - round(params.M)) > 1e-9 or \
            abs(params.alpha - round(params.alpha)) > 1e-9:
             raise ValueError("data-plane simulation needs integral M, alpha")
+        if engine not in ("batched", "scalar"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.params = params
+        self.engine = engine
         self.field = field
         self.rl = RLNC(field, matmul=matmul)
         self.np_rng = np.random.default_rng(seed)
@@ -168,15 +192,52 @@ class RlncSimulator:
         assert received is not None
         self.nodes[failed] = self.rl.regenerate(received, alpha, self.np_rng)
 
-    def repair_round(self, scheme: str, sampler: CapSampler,
-                     failed: Optional[int] = None) -> RepairPlan:
+    def _sample_round(self, sampler: CapSampler,
+                      failed: Optional[int] = None):
+        """(failed, providers, overlay) for one repair round.
+
+        Draws only from ``self.rng`` — the data-plane ``np_rng`` is a
+        separate stream, so rounds may be pre-sampled in bulk (for batched
+        planning) without perturbing execution randomness.  Anything else
+        drawing from ``self.rng`` between rounds (subset-sampled
+        ``reconstruction_probability``) IS perturbed by bulk pre-sampling;
+        see ``reconstruction_vs_rounds``."""
         ids = sorted(self.nodes)
         if failed is None:
             failed = self.rng.choice(ids)
         survivors = [i for i in ids if i != failed]
         providers = self.rng.sample(survivors, self.params.d)
         net = sampler(self.rng, self.params.d)
-        plan = SCHEMES[scheme](net, self.params)
+        return failed, providers, net
+
+    def plan_rounds(self, scheme: str, sampler: CapSampler,
+                    rounds: int) -> List:
+        """Pre-sample ``rounds`` repair rounds and plan them all.
+
+        With the batched engine this is ONE ``plan_batch`` call for the
+        whole trial (plans depend only on the sampled overlays, never on
+        the coded state); schemes without a batched planner (rctree) use
+        the scalar loop.  Returns [(failed, providers, plan), ...] ready
+        for ``execute_plan``.
+        """
+        drawn = [self._sample_round(sampler) for _ in range(rounds)]
+        if self.engine == "batched" and scheme in BATCHED_SCHEMES:
+            res = plan_batch(caps_tensor([net for _, _, net in drawn]),
+                             self.params, scheme)
+            plans = plans_from_batch(res, self.params)
+        else:   # scalar oracle, and schemes without a batched planner
+            plans = [SCHEMES[scheme](net, self.params)
+                     for _, _, net in drawn]
+        return [(f, p, plan) for (f, p, _), plan in zip(drawn, plans)]
+
+    def repair_round(self, scheme: str, sampler: CapSampler,
+                     failed: Optional[int] = None) -> RepairPlan:
+        failed, providers, net = self._sample_round(sampler, failed)
+        if self.engine == "batched" and scheme in BATCHED_SCHEMES:
+            res = plan_batch(caps_tensor([net]), self.params, scheme)
+            plan = plans_from_batch(res, self.params)[0]
+        else:   # scalar oracle, and schemes without a batched planner
+            plan = SCHEMES[scheme](net, self.params)
         self.execute_plan(plan, failed, providers)
         return plan
 
@@ -198,13 +259,35 @@ class RlncSimulator:
 def reconstruction_vs_rounds(params: CodeParams, scheme: str,
                              sampler: CapSampler, rounds: int, trials: int,
                              field: GF = GF8, seed: int = 0,
-                             subset_samples: int = 0) -> List[float]:
-    """Fig. 10: mean reconstruction probability after each repair round."""
+                             subset_samples: int = 0,
+                             engine: str = "batched") -> List[float]:
+    """Fig. 10: mean reconstruction probability after each repair round.
+
+    Planning runs on the batched engine by default: each trial's rounds are
+    pre-sampled and planned in ONE ``plan_batch`` call (the plan depends
+    only on the sampled overlay, never on the coded state, and the overlay
+    rng is a separate stream from the data-plane rng — so the round-by-round
+    scalar oracle, ``engine="scalar"``, produces identical node states).
+
+    The bulk path requires that nothing else consumes ``sim.rng`` between
+    rounds: with ``subset_samples > 0``, ``reconstruction_probability``
+    draws k-subsets from that same stream, so bulk pre-sampling would
+    reorder the draws and diverge from the oracle — those calls (and
+    schemes without a batched planner, e.g. rctree) use the round-by-round
+    loop instead, which preserves the stream order exactly."""
     probs = [0.0] * (rounds + 1)
     for tr in range(trials):
-        sim = RlncSimulator(params, field=field, seed=seed + 1000 * tr)
+        sim = RlncSimulator(params, field=field, seed=seed + 1000 * tr,
+                            engine=engine)
         probs[0] += sim.reconstruction_probability(subset_samples)
-        for r in range(1, rounds + 1):
-            sim.repair_round(scheme, sampler)
-            probs[r] += sim.reconstruction_probability(subset_samples)
+        if (engine == "batched" and subset_samples == 0
+                and scheme in BATCHED_SCHEMES):
+            planned = sim.plan_rounds(scheme, sampler, rounds)
+            for r, (failed, providers, plan) in enumerate(planned, start=1):
+                sim.execute_plan(plan, failed, providers)
+                probs[r] += sim.reconstruction_probability(subset_samples)
+        else:
+            for r in range(1, rounds + 1):
+                sim.repair_round(scheme, sampler)
+                probs[r] += sim.reconstruction_probability(subset_samples)
     return [p / trials for p in probs]

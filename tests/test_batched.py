@@ -129,6 +129,66 @@ def test_compare_schemes_engines_agree():
                                                        rel=1e-9)
 
 
+def test_compare_schemes_fallback_warns_once_and_reports_engine():
+    """Schemes without a batched planner (shah, rctree) must announce the
+    scalar fallback exactly once per process and surface the engine that
+    actually planned them in SchemeStats.engine."""
+    import warnings
+
+    from repro.storage import compare_schemes, uniform
+    from repro.storage import simulator as sim_mod
+
+    params = CodeParams.msr(n=12, k=3, d=4, M=120.0)
+    sim_mod._warned_scalar_fallback.clear()
+    with pytest.warns(RuntimeWarning, match="no batched planner for 'shah'"):
+        stats = compare_schemes(params, uniform(), ("star", "shah"),
+                                trials=3, seed=0, engine="batched")
+    assert stats["star"].engine == "batched"
+    assert stats["shah"].engine == "scalar"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)  # would fail the call
+        again = compare_schemes(params, uniform(), ("shah",), trials=2,
+                                seed=1, engine="batched")
+    assert again["shah"].engine == "scalar"
+    scalar = compare_schemes(params, uniform(), ("star",), trials=2,
+                             seed=1, engine="scalar")
+    assert scalar["star"].engine == "scalar"
+
+
+def test_rlnc_simulator_batched_planning_matches_scalar():
+    """The fig10 data-plane simulator's planning step on the batched engine
+    reproduces the scalar oracle's node states exactly."""
+    from repro.storage import RlncSimulator, uniform
+
+    params = CodeParams.msr(n=8, k=2, d=4, M=6.0)
+    sims = {e: RlncSimulator(params, seed=5, engine=e)
+            for e in ("batched", "scalar")}
+    for _ in range(3):
+        for sim in sims.values():
+            sim.repair_round("ftr", uniform())
+    a, b = sims["batched"], sims["scalar"]
+    for node in a.nodes:
+        np.testing.assert_array_equal(a.nodes[node].vectors,
+                                      b.nodes[node].vectors)
+    assert a.reconstruction_probability() == b.reconstruction_probability()
+    # the fig10 driver batches a whole trial's planning into one call;
+    # probabilities must match the round-by-round scalar oracle exactly
+    from repro.storage import reconstruction_vs_rounds
+
+    pb = reconstruction_vs_rounds(params, "ftr", uniform(), rounds=3,
+                                  trials=1, seed=9, engine="batched")
+    ps = reconstruction_vs_rounds(params, "ftr", uniform(), rounds=3,
+                                  trials=1, seed=9, engine="scalar")
+    assert pb == ps
+    # subset sampling draws from the same rng stream as round sampling, so
+    # the driver must take the order-preserving path there — still equal
+    kw = dict(rounds=3, trials=1, seed=9, subset_samples=5)
+    assert (reconstruction_vs_rounds(params, "ftr", uniform(),
+                                     engine="batched", **kw)
+            == reconstruction_vs_rounds(params, "ftr", uniform(),
+                                        engine="scalar", **kw))
+
+
 # ---------------------------------------------------------------------------
 # plan_tr tie-break regression (crafted capacity matrix)
 # ---------------------------------------------------------------------------

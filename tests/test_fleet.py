@@ -1,0 +1,290 @@
+"""Fleet simulator validated against closed forms (ISSUE 2 acceptance).
+
+* no contention  -> fleet regeneration time == plan_time of the chosen plan;
+* disjoint links -> coexisting repairs don't affect each other at all;
+* shared bottleneck -> the fair-share model yields the analytic slowdown
+  (2x while two plans overlap on one saturated link, including the
+  staggered-start piecewise case);
+* the flexible policy's mean backlog <= every fixed-scheme policy's on a
+  seeded ~200-failure scenario;
+
+plus degenerate-capacity coverage: near-zero links (the U1[0.3,120] tail),
+exact ties across all links, and zero-capacity links — planners and the
+link-sharing model must never divide by zero or emit negative times.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
+                        RepairPlan, SCHEMES, caps_tensor, plan_batch,
+                        plan_time, plans_from_batch, tree_flows)
+from repro.fleet import (FixedPolicy, FleetSimulator, FlexiblePolicy,
+                         LinkShareModel, RepairPolicy, Scenario, simulate)
+from repro.storage import uniform_matrix
+
+PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+SCHEME_NAMES = ("star", "fr", "tr", "ftr")
+
+
+def _fixed_caps(n: int, seed: int = 0, lo: float = 10.0, hi: float = 120.0):
+    """A capacity model returning one deterministic matrix."""
+    caps = np.random.default_rng(seed).uniform(lo, hi, size=(n, n))
+    np.fill_diagonal(caps, 0.0)
+    return caps, (lambda rng, m: caps.copy())
+
+
+def _first_providers(failed, healthy, rng):
+    return [h for h in healthy if h != failed][:PARAMS.d]
+
+
+# ---------------------------------------------------------------------------
+# 1. No contention: fleet time == plan_time of the chosen scheme
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEME_NAMES)
+def test_single_repair_matches_plan_time(scheme):
+    n = 10
+    caps, model = _fixed_caps(n, seed=3)
+    sc = Scenario(num_nodes=n, duration=1000.0, failure_rate=0.0,
+                  failures=((10.0, 0),), capacity_model=model,
+                  provider_picker=_first_providers)
+    m = FleetSimulator(sc, FixedPolicy(scheme), PARAMS, seed=0).run()
+    assert m.completed == 1 and m.aborted == 0
+    ids = [0] + list(range(1, PARAMS.d + 1))
+    overlay = OverlayNetwork(caps[np.ix_(ids, ids)].tolist())
+    expect = SCHEMES[scheme](overlay, PARAMS).time
+    assert m.regen_times[0] == pytest.approx(expect, rel=1e-9)
+    # the vulnerability window adds the queue wait (zero here beyond start)
+    assert m.vulnerability_windows[0] == pytest.approx(expect, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# 2. Disjoint links: coexistence changes nothing
+# ---------------------------------------------------------------------------
+
+def _group_picker(failed, healthy, rng):
+    lo, hi = (1, 7) if failed == 0 else (8, 14)
+    return [h for h in healthy if lo <= h < hi][:PARAMS.d]
+
+
+def test_disjoint_repairs_are_independent():
+    n = 14
+    caps, model = _fixed_caps(n, seed=5)
+    both = Scenario(num_nodes=n, duration=1000.0, failure_rate=0.0,
+                    failures=((10.0, 0), (10.0, 7)), capacity_model=model,
+                    provider_picker=_group_picker)
+    for scheme in ("star", "ftr"):
+        mb = FleetSimulator(both, FixedPolicy(scheme), PARAMS, seed=0).run()
+        assert mb.completed == 2
+        solo_times = []
+        for node in (0, 7):
+            solo = Scenario(num_nodes=n, duration=1000.0, failure_rate=0.0,
+                            failures=((10.0, node),), capacity_model=model,
+                            provider_picker=_group_picker)
+            ms = FleetSimulator(solo, FixedPolicy(scheme), PARAMS,
+                                seed=0).run()
+            assert ms.completed == 1
+            solo_times.append(ms.regen_times[0])
+        # node 0's repair uses providers 1..6 only; node 7's uses 8..13:
+        # no physical link is shared, so coexistence changes neither time
+        np.testing.assert_allclose(sorted(mb.regen_times),
+                                   sorted(solo_times), rtol=0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 3. Shared saturated bottleneck: analytic fair-share slowdown
+# ---------------------------------------------------------------------------
+
+CRAFT_PARAMS = CodeParams(n=6, k=2, d=2, M=2.0, alpha=1.0)
+
+
+class CraftedRelayPolicy(RepairPolicy):
+    """Both providers relay through provider 2: tree 1 -> 2 -> newcomer.
+
+    With the shared provider pair picked for every repair, the physical
+    link (provider 1, provider 2) is common to all plans — the crafted
+    probe for the fair-share model."""
+
+    name = "crafted"
+
+    def plan_batch(self, caps, params):
+        plans = []
+        for c in caps:
+            parent = {1: 2, 2: 0}
+            betas = [1.0, 1.0]
+            flows = tree_flows(parent, betas, params.alpha)
+            net = OverlayNetwork(c.tolist())
+            plan = RepairPlan("crafted", params, parent, betas, flows, 0.0)
+            plan.time = plan_time(plan, net)
+            plans.append(plan)
+        return plans
+
+
+def _bottleneck_model(n=6, c_slow=10.0, c_fast=1e6):
+    caps = np.full((n, n), c_fast)
+    np.fill_diagonal(caps, 0.0)
+    caps[4, 5] = c_slow                  # the saturated link
+    return caps, (lambda rng, m: caps.copy())
+
+
+def _shared_pair_picker(failed, healthy, rng):
+    return [4, 5]
+
+
+def test_shared_bottleneck_fair_share_slowdown():
+    _, model = _bottleneck_model()
+    base = dict(num_nodes=6, duration=100.0, failure_rate=0.0,
+                capacity_model=model, provider_picker=_shared_pair_picker)
+    # solo: flow 1 over the c=10 link -> 0.1 s
+    ms = FleetSimulator(Scenario(failures=((0.0, 0),), **base),
+                        CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert ms.regen_times == [pytest.approx(0.1, abs=1e-12)]
+    # full overlap: both plans share the link the whole time -> exactly 2x
+    m2 = FleetSimulator(Scenario(failures=((0.0, 0), (0.0, 1)), **base),
+                        CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m2.completed == 2
+    np.testing.assert_allclose(m2.regen_times, [0.2, 0.2], rtol=0,
+                               atol=1e-12)
+    # staggered: A alone for 0.05 s (half done), then shares until finishing
+    # at 0.15; B ran 0.1 s at half rate + 0.05 s at full rate -> also 0.15
+    mst = FleetSimulator(Scenario(failures=((0.0, 0), (0.05, 1)), **base),
+                         CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert mst.completed == 2
+    np.testing.assert_allclose(sorted(mst.regen_times), [0.15, 0.15],
+                               rtol=0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 4. Flexible policy dominates fixed schemes on backlog
+# ---------------------------------------------------------------------------
+
+def test_flexible_backlog_dominates_fixed():
+    """Seeded ~200-failure scenario over the paper's widest heterogeneity
+    (U[0.3, 120]): picking the fastest scheme per repair must not queue
+    more work than any fixed scheme."""
+    params = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+    sc = Scenario(num_nodes=16, duration=7000.0, failure_rate=2e-3,
+                  capacity_model=uniform_matrix(0.3, 120.0))
+    flex = FleetSimulator(sc, FlexiblePolicy(), params, seed=42).run()
+    assert flex.completed + flex.aborted >= 150   # ~200 failure events
+    flex_backlog = flex.summary()["mean_backlog"]
+    assert math.isfinite(flex_backlog)
+    for scheme in SCHEME_NAMES:
+        fixed = FleetSimulator(sc, FixedPolicy(scheme), params, seed=42).run()
+        assert flex_backlog <= fixed.summary()["mean_backlog"] + 1e-9, scheme
+
+
+# ---------------------------------------------------------------------------
+# Degenerate capacities: planners (scalar + batched)
+# ---------------------------------------------------------------------------
+
+def _tail_nets(count=6, d=6, seed=9):
+    """U1[0.3,120]-tail overlays: a large share of links pinned at the 0.3
+    floor, the rest fast — the regime where naive division blows up."""
+    rng = np.random.default_rng(seed)
+    nets = []
+    for _ in range(count):
+        cap = rng.uniform(0.3, 120.0, size=(d + 1, d + 1))
+        slow = rng.random(size=cap.shape) < 0.4
+        cap[slow] = 0.3
+        np.fill_diagonal(cap, 0.0)
+        nets.append(OverlayNetwork(cap.tolist()))
+    return nets
+
+
+def test_planners_near_zero_capacity_tail():
+    nets = _tail_nets()
+    caps = caps_tensor(nets)
+    for s in SCHEME_NAMES:
+        res = BATCHED_SCHEMES[s](caps, PARAMS)
+        assert np.isfinite(res.times).all() and (res.times >= 0).all(), s
+        assert (res.betas >= -1e-12).all(), s
+        for net, plan in zip(nets, plans_from_batch(res, PARAMS)):
+            assert plan.time >= 0 and math.isfinite(plan.time)
+            plan.validate(net)
+        scalar = [SCHEMES[s](net, PARAMS) for net in nets]
+        np.testing.assert_allclose(res.times, [p.time for p in scalar],
+                                   rtol=1e-9, atol=1e-6, err_msg=s)
+
+
+def test_planners_all_links_tied():
+    d = PARAMS.d
+    cap = np.full((d + 1, d + 1), 50.0)
+    np.fill_diagonal(cap, 0.0)
+    net = OverlayNetwork(cap.tolist())
+    caps = caps_tensor([net])
+    for s in SCHEME_NAMES:
+        scalar = SCHEMES[s](net, PARAMS)
+        assert math.isfinite(scalar.time) and scalar.time >= 0, s
+        res = BATCHED_SCHEMES[s](caps, PARAMS)
+        assert res.times[0] == pytest.approx(scalar.time, rel=1e-9, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate capacities: the link-sharing model
+# ---------------------------------------------------------------------------
+
+def test_share_model_saturated_and_zero_links():
+    caps = np.array([[0.0, 10.0, 0.0],
+                     [10.0, 0.0, 4.0],
+                     [0.0, 4.0, 0.0]])
+    with np.errstate(divide="raise", invalid="raise"):
+        m = LinkShareModel(caps)
+        links = [((1, 2), 8.0)]
+        m.acquire(links)
+        assert m.share((1, 2)) == pytest.approx(4.0)
+        m.acquire(links)                      # second plan on the same link
+        assert m.share((1, 2)) == pytest.approx(2.0)
+        assert m.residual((1, 2)) == pytest.approx(4.0 / 3.0)
+        # saturated link shared by two plans: each needs 8 blocks at 2 b/s
+        assert m.nominal_time(links) == pytest.approx(4.0)
+        # a zero-capacity link stalls (inf), it must not raise
+        assert m.nominal_time([((0, 2), 1.0)]) == math.inf
+        assert m.residual((0, 2)) == 0.0
+        # negligible flows occupy nothing and contribute no time
+        assert m.nominal_time([((1, 2), 0.0)]) == 0.0
+        m.release(links)
+        m.release(links)
+        assert m.users == {}
+        overlay = m.residual_overlay([0, 1, 2])
+        assert np.isfinite(overlay).all() and (overlay >= 0).all()
+
+
+def test_fleet_survives_near_zero_and_tied_capacities():
+    """End-to-end: the simulator on U[0.3,120]-tail and all-tied clusters
+    stays finite, monotone, and non-negative."""
+    params = CodeParams.msr(n=8, k=2, d=4, M=100.0)
+
+    def tied(rng, n):
+        cap = np.full((n, n), 7.0)
+        np.fill_diagonal(cap, 0.0)
+        return cap
+
+    for model in (uniform_matrix(0.3, 120.0), tied):
+        sc = Scenario(num_nodes=10, duration=800.0, failure_rate=3e-3,
+                      capacity_model=model)
+        s = simulate(sc, FlexiblePolicy(), params, seed=1)
+        assert math.isfinite(s["mean_backlog"]) and s["mean_backlog"] >= 0
+        assert s["regen_p99"] >= s["regen_p50"] >= 0
+        assert s["completed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Batched <-> scalar plan materialization used by the policies
+# ---------------------------------------------------------------------------
+
+def test_plans_from_batch_validate():
+    rng = np.random.default_rng(11)
+    nets = []
+    for _ in range(5):
+        cap = rng.uniform(10.0, 120.0, size=(PARAMS.d + 1, PARAMS.d + 1))
+        np.fill_diagonal(cap, 0.0)
+        nets.append(OverlayNetwork(cap.tolist()))
+    caps = caps_tensor(nets)
+    for s in SCHEME_NAMES:
+        plans = plans_from_batch(plan_batch(caps, PARAMS, s), PARAMS)
+        for net, plan in zip(nets, plans):
+            plan.validate(net)
+            assert plan.scheme == s
