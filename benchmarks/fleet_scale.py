@@ -14,11 +14,20 @@ the config name via crc32, and no wall-clock measurement enters the JSON —
 ``BENCH_fleet.json`` is bitwise reproducible across runs on one machine.
 Wall time only feeds the ``us_per_call`` CSV column.
 
+The sweep includes a repair-lifecycle column (PR 3): the abort-heavy
+``flaky_providers`` scenario per policy with partial-progress carryover and
+in-flight plan migration off (``..._<pol>``, the default path), carryover
+only (``..._carry``), and carryover + migration (``..._mig``).  Rows whose
+name carries no lifecycle suffix run the pre-PR-3 dynamics bitwise;
+``benchmarks/golden/fleet_quick_seed0.json`` pins their quick-mode values
+and CI fails on any diff (see tests/test_fleet.py and ci.yml).
+
 CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N]`` (CI runs the
 ``--quick`` smoke, which asserts the artifact exists and backlog is finite).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import math
 import os
@@ -70,6 +79,20 @@ def _sweep(quick: bool):
             for pol in ("ftr", "flexible"):
                 sc = SCENARIOS[kind](n, failure_rate=lam, duration=duration)
                 yield f"{kind}_n{n}_{pol}", sc, pol
+    # repair-lifecycle column (policy x migration): the abort-heavy
+    # flaky_providers scenario, per policy with the lifecycle machinery
+    # off (default path — bitwise-guarded), carryover only, and
+    # carryover + in-flight migration
+    n, lam = 16, 4e-3
+    duration = budget / (lam * n)
+    for pol in ("flexible",) if quick else ("ftr", "flexible"):
+        sc = SCENARIOS["flaky_providers"](n, failure_rate=lam,
+                                          duration=duration)
+        yield f"flaky_providers_n{n}_{pol}", sc, pol
+        yield (f"flaky_providers_n{n}_{pol}_carry",
+               dataclasses.replace(sc, carryover=True), pol)
+        yield (f"flaky_providers_n{n}_{pol}_mig",
+               dataclasses.replace(sc, carryover=True, migration=True), pol)
 
 
 def run(root_seed: int = 0):
@@ -89,7 +112,9 @@ def run(root_seed: int = 0):
             f"fleet/{name}", wall / events * 1e6,
             f"backlog={summary['mean_backlog']:.3f} "
             f"p99={summary['regen_p99']:.3f}s "
-            f"vuln_p99={summary['vulnerability_p99']:.3f}s"))
+            f"vuln_p99={summary['vulnerability_p99']:.3f}s "
+            f"mig={summary['migrations']:.0f} "
+            f"saved={summary['work_saved_fraction']:.2f}"))
     artifact = {"quick": quick, "root_seed": root_seed, "configs": configs}
     save_artifact("fleet_scale", artifact)
     with open(os.path.join(REPO_ROOT, "BENCH_fleet.json"), "w") as f:

@@ -15,15 +15,18 @@ from .cluster import ClusterState, FAILED, HEALTHY, REPAIRING
 from .events import Event, EventQueue
 from .metrics import FleetMetrics
 from .policy import FixedPolicy, FlexiblePolicy, RepairPolicy, make_policy
-from .scenario import (SCENARIOS, Scenario, capacity_weather, hot_reads,
-                       rack_bursts, steady, tiered, tiered_capacities)
-from .sharing import ActiveRepair, LinkShareModel, plan_links
-from .sim import FleetSimulator, simulate
+from .scenario import (SCENARIOS, Scenario, capacity_weather,
+                       flaky_providers, hot_reads, rack_bursts, steady,
+                       tiered, tiered_capacities)
+from .sharing import ActiveRepair, LinkShareModel, apply_credit, plan_links
+from .sim import FleetSimulator, QueuedRepair, simulate
 
 __all__ = [
     "ActiveRepair", "ClusterState", "Event", "EventQueue", "FAILED",
     "FleetMetrics", "FleetSimulator", "FixedPolicy", "FlexiblePolicy",
-    "HEALTHY", "LinkShareModel", "REPAIRING", "RepairPolicy", "SCENARIOS",
-    "Scenario", "capacity_weather", "hot_reads", "make_policy", "plan_links",
-    "rack_bursts", "simulate", "steady", "tiered", "tiered_capacities",
+    "HEALTHY", "LinkShareModel", "QueuedRepair", "REPAIRING",
+    "RepairPolicy", "SCENARIOS", "Scenario", "apply_credit",
+    "capacity_weather", "flaky_providers", "hot_reads", "make_policy",
+    "plan_links", "rack_bursts", "simulate", "steady", "tiered",
+    "tiered_capacities",
 ]

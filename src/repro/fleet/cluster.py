@@ -14,10 +14,16 @@ A REPAIRING slot that loses a provider reverts to FAILED (requeued by the
 simulator).  ``unavailable`` counts FAILED + REPAIRING slots — an (n, k) MDS
 code loses data when that exceeds n - k, i.e. fewer than k slots are
 HEALTHY.
+
+A FAILED slot is not necessarily empty: with partial-progress carryover the
+replacement host keeps the blocks it already received before the abort (the
+simulator's queue carries the per-link bank), so FAILED -> REPAIRING may
+resume from banked work rather than from zero.  Health state and progress
+state are deliberately separate — this class only answers "who is up".
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Set
 
 import numpy as np
 
@@ -55,6 +61,11 @@ class ClusterState:
 
     def healthy_nodes(self) -> List[int]:
         return [int(x) for x in np.flatnonzero(self.state == HEALTHY)]
+
+    def healthy_set(self) -> Set[int]:
+        """Same membership as :meth:`healthy_nodes`, O(1) lookups — for
+        filtering surviving providers and torn-down read endpoints."""
+        return set(self.healthy_nodes())
 
     @property
     def num_healthy(self) -> int:

@@ -17,7 +17,12 @@ needed for percentiles.
   loss), the instantaneous loss rate is lambda * healthy(t).  Integrated
   over the run this gives the expected number of loss events, and
   MTTDL ~= duration / E[events] — a standard rare-event estimator that
-  stays finite and seeded-deterministic.
+  stays finite and seeded-deterministic.  The intensity accrues for every
+  state at or past the boundary (``unavailable >= n - k``), not just at
+  equality — deep-failure excursions keep losing data;
+* repair-lifecycle counters (PR 3) — migrations, carryover vs cold aborts,
+  and the work-saved fraction (banked blocks credited at re-admissions and
+  migrations as a share of the plans' totals).
 """
 from __future__ import annotations
 
@@ -48,8 +53,17 @@ class FleetMetrics:
 
     completed: int = 0
     aborted: int = 0
+    carryover_aborts: int = 0          # aborts that kept banked blocks
+    cold_aborts: int = 0               # aborts that restarted from zero
+    migrations: int = 0                # accepted in-flight plan migrations
+    # blocks credited instead of re-sent, summed per (re)plan event: every
+    # re-plan would otherwise restart its plan from zero, so a bank that
+    # survives several re-plans is (correctly) credited at each of them —
+    # this is a per-event demand discount, not a count of unique blocks
+    work_saved: float = 0.0
     data_loss_events: int = 0
 
+    credit_fractions: List[float] = dataclasses.field(default_factory=list)
     regen_times: List[float] = dataclasses.field(default_factory=list)
     vulnerability_windows: List[float] = dataclasses.field(
         default_factory=list)
@@ -69,6 +83,11 @@ class FleetMetrics:
                 self.unavail_time += dt
             if self.unavailable == self.n - self.k:
                 self.at_risk_time += dt
+            if self.unavailable >= self.n - self.k:
+                # conditional ruin intensity: every further failure is a
+                # loss event, *including* while already past the boundary —
+                # integrating only at equality would stop accruing when a
+                # run dips deeper and bias the MTTDL estimate high
                 healthy = self.n - self.unavailable
                 self.expected_losses += self.failure_rate * healthy * dt
         self.now = t
@@ -85,8 +104,24 @@ class FleetMetrics:
         self.wait_times.append(start_time - fail_time)
         self.vulnerability_windows.append(end_time - fail_time)
 
-    def on_abort(self) -> None:
+    def on_abort(self, carryover: bool = False) -> None:
         self.aborted += 1
+        if carryover:
+            self.carryover_aborts += 1
+        else:
+            self.cold_aborts += 1
+
+    def on_carryover(self, saved: float, planned: float) -> None:
+        """Banked-work credit applied at a (re)plan event: ``saved`` of the
+        plan's ``planned`` total blocks were already received and are not
+        re-sent (see the ``work_saved`` field note on summing)."""
+        self.work_saved += saved
+        self.credit_fractions.append(saved / planned if planned > 0 else 0.0)
+
+    def on_migration(self, saved: float, planned: float) -> None:
+        """An in-flight repair migrated to a new plan, with credit."""
+        self.migrations += 1
+        self.on_carryover(saved, planned)
 
     def on_data_loss(self) -> None:
         self.data_loss_events += 1
@@ -105,6 +140,12 @@ class FleetMetrics:
             "duration": self.now,
             "completed": self.completed,
             "aborted": self.aborted,
+            "carryover_aborts": self.carryover_aborts,
+            "cold_aborts": self.cold_aborts,
+            "migrations": self.migrations,
+            "work_saved_blocks": self.work_saved,
+            "work_saved_fraction": (float(np.mean(self.credit_fractions))
+                                    if self.credit_fractions else 0.0),
             "mean_backlog": self.backlog_integral / dur,
             "max_backlog": self.max_backlog,
             "regen_p50": self._pct(self.regen_times, 50),

@@ -20,10 +20,18 @@ predicted — the simulator's contention signal, not a planning error.
 Custom policies only need ``plan_batch`` (see tests/test_fleet.py for a
 crafted-plan policy used to validate the link-sharing model), so anything
 from an RL agent to an LP-based global scheduler can plug in.
+
+Since PR 3 the interface has a second batched entry point:
+:meth:`RepairPolicy.replan` proposes replacement plans for in-flight
+repairs at capacity-shock / provider-loss epochs (plan migration).  The
+default delegates to ``plan_batch`` — the flexible policy thereby migrates
+a repair to whatever scheme/tree is fastest under the *current* shares,
+and a fixed policy re-treeifies within its scheme — while the simulator
+applies banked-work credit and keeps the migration only if it wins.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,6 +47,27 @@ class RepairPolicy:
     def plan_batch(self, caps: np.ndarray, params: CodeParams,
                    ) -> List[RepairPlan]:
         raise NotImplementedError
+
+    def replan(self, caps: np.ndarray, params: CodeParams,
+               ) -> List[Optional[RepairPlan]]:
+        """Propose replacement plans for *in-flight* repairs (migration).
+
+        Called by the simulator at capacity-shock and provider-loss epochs
+        when ``Scenario.migration`` is on, with one ``(R, d+1, d+1)``
+        tensor of *self-excluded* residual overlays — each in-flight
+        repair's own link occupancy is discounted, so row r is the share
+        snapshot that repair would plan under if it released its current
+        links.  Return one plan (or ``None`` to decline) per row, same
+        batched one-call-per-epoch contract as :meth:`plan_batch`.
+
+        The simulator — not the policy — owns the accept decision: it
+        subtracts the repair's banked blocks from the proposal's edge
+        demands (credit transfer) and migrates only if the credited ETA
+        beats the current one.  The default proposes exactly what
+        :meth:`plan_batch` would plan, which gives every policy tree/
+        scheme adaptation for free; override to decline or customize.
+        """
+        return self.plan_batch(caps, params)
 
 
 class FixedPolicy(RepairPolicy):

@@ -83,6 +83,12 @@ class Scenario:
     # -- repair admission ---------------------------------------------------
     max_concurrent: int = 4
     provider_picker: Optional[ProviderPicker] = None
+    # -- repair lifecycle (both OFF by default: the default path reproduces
+    #    the pre-PR-3 dynamics bitwise) -------------------------------------
+    carryover: bool = False           # keep banked blocks on provider-loss
+    #                                   aborts; credit them at re-admission
+    migration: bool = False           # offer in-flight repairs a re-plan at
+    #                                   capacity-shock / provider-loss epochs
 
     def __post_init__(self):
         if self.num_nodes < 2:
@@ -119,12 +125,19 @@ def rack_bursts(n: int, failure_rate: float = 2e-3,
 
 
 def capacity_weather(n: int, failure_rate: float = 2e-3,
-                     duration: float = 20_000.0) -> Scenario:
-    """Background-traffic weather: every 500 s each link's capacity is
-    rescaled by an independent U[0.25, 1] multiplier."""
+                     duration: float = 20_000.0,
+                     shock_period: float = 500.0, shock_lo: float = 0.25,
+                     cap_lo: float = 10.0, cap_hi: float = 120.0) -> Scenario:
+    """Background-traffic weather: every ``shock_period`` seconds each
+    link's capacity is rescaled by an independent U[shock_lo, 1]
+    multiplier.  The storm knobs (fast, deep shocks over slow links) put
+    in-flight repairs under weather that outlives their plans — the
+    regime plan migration is for."""
     return Scenario(num_nodes=n, duration=duration,
                     failure_rate=failure_rate,
-                    shock_period=500.0, shock_lo=0.25, shock_hi=1.0)
+                    capacity_model=uniform_matrix(cap_lo, cap_hi),
+                    shock_period=shock_period, shock_lo=shock_lo,
+                    shock_hi=1.0)
 
 
 def hot_reads(n: int, failure_rate: float = 2e-3,
@@ -144,10 +157,25 @@ def tiered(n: int, failure_rate: float = 2e-3,
                     capacity_model=tiered_capacities())
 
 
+def flaky_providers(n: int, failure_rate: float = 4e-3,
+                    duration: float = 2_500.0) -> Scenario:
+    """Provider-loss stress: slow links stretch regenerations onto the same
+    timescale as the failure process, so in-flight repairs frequently lose
+    a provider mid-transfer — the abort / partial-progress-carryover /
+    migration path.  Pair with ``dataclasses.replace(sc, carryover=True,
+    migration=True)`` to measure how much of the vulnerability window the
+    lifecycle machinery claws back."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    capacity_model=uniform_matrix(0.3, 8.0),
+                    max_concurrent=8)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "rack_bursts": rack_bursts,
     "capacity_weather": capacity_weather,
     "hot_reads": hot_reads,
     "tiered": tiered,
+    "flaky_providers": flaky_providers,
 }

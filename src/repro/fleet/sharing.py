@@ -23,6 +23,15 @@ Consequences the tests pin down (tests/test_fleet.py):
 All divisions are guarded: a zero-capacity link yields an ``inf`` nominal
 duration (the repair stalls, matching ``plan_time``'s convention), never a
 ZeroDivisionError; flows below ``FLOW_EPS`` occupy nothing.
+
+Progress is a *vector*, not a scalar (PR 3): each repair tracks blocks
+received per physical link (``ActiveRepair.bank`` + the in-flight lockstep
+fraction).  On a provider-loss abort the banked blocks survive with the
+queued slot, and on re-admission or in-flight migration
+:func:`apply_credit` subtracts them from the new plan's edge demands —
+only the missing flows are re-transferred.  With carryover and migration
+disabled the bank stays empty and every arithmetic step reduces bitwise to
+the scalar-\\ ``remaining`` model this replaces.
 """
 from __future__ import annotations
 
@@ -54,21 +63,65 @@ def plan_links(plan: RepairPlan, ids: Sequence[int],
     return out
 
 
+def apply_credit(flows: Sequence[Tuple[Link, float]],
+                 bank: Dict[Link, float],
+                 ) -> Tuple[List[Tuple[Link, float]], float, float]:
+    """Subtract banked blocks from a plan's per-link demands.
+
+    Returns ``(residual links, credited blocks, total planned blocks)``.
+    Credit on each link is capped at the plan's demand there; links whose
+    demand is fully prepaid drop out (they move no further data and must
+    not claim a share).  Bank entries on links the plan does not use are
+    left untouched in ``bank`` — they stay available for a later
+    migration back onto those links.
+    """
+    out: List[Tuple[Link, float]] = []
+    credited = 0.0
+    total = 0.0
+    for link, f in flows:
+        total += f
+        credit = min(bank.get(link, 0.0), f)
+        credited += credit
+        resid = f - credit
+        if resid > FLOW_EPS:
+            out.append((link, resid))
+    return out, credited, total
+
+
 @dataclasses.dataclass
 class ActiveRepair:
-    """A regeneration in flight.
+    """A regeneration in flight, with per-plan-edge progress state.
 
-    ``remaining`` is the fraction of total work left (1 at start);
-    ``nominal`` is the duration the whole repair would take at the *current*
-    shares.  Time to finish right now is ``remaining * nominal``.
+    ``links`` holds the *residual* demand per physical link fixed at the
+    last (re)plan: the plan's per-edge flows minus any banked credit.
+    ``remaining`` is the fraction of that residual work left (1 at a fresh
+    (re)plan); ``nominal`` is the duration the residual work would take at
+    the *current* shares.  Time to finish right now is
+    ``remaining * nominal``.
+
+    Progress is fluid store-and-forward: every residual edge advances in
+    lockstep fraction ``1 - remaining``, so a child edge has always
+    delivered the same fraction of its demand as its parent — no node ever
+    forwards blocks it has not received.  ``bank`` records blocks received
+    *before* the last (re)plan (per physical link, across the repair's
+    whole life); :meth:`banked_now` folds the in-flight fraction on top.
+
+    The progress-vector invariant (pinned by tests/test_fleet.py): for
+    every edge of the current plan,
+
+        banked_now(e) + remaining * residual(e) == plan flow on e
+
+    i.e. banked plus outstanding work always equals the plan total —
+    credit transfer never creates or destroys work.
     """
 
     node: int                           # slot being regenerated
     plan: RepairPlan
     ids: List[int]                      # overlay index -> cluster node
-    links: List[Tuple[Link, float]]     # physical link -> flow on it
+    links: List[Tuple[Link, float]]     # physical link -> residual demand
     fail_time: float
     start_time: float
+    bank: Dict[Link, float] = dataclasses.field(default_factory=dict)
     remaining: float = 1.0
     nominal: float = math.inf
 
@@ -88,6 +141,45 @@ class ActiveRepair:
             self.remaining = max(0.0, self.remaining - dt / self.nominal)
         elif self.nominal == 0.0:       # degenerate all-tiny-flow plan
             self.remaining = 0.0
+
+    def banked_now(self) -> Dict[Link, float]:
+        """Blocks received per physical link as of right now: the bank
+        fixed at the last (re)plan plus the in-flight lockstep fraction of
+        every residual edge."""
+        out = dict(self.bank)
+        done = 1.0 - self.remaining
+        if done > 0.0:
+            for link, resid in self.links:
+                out[link] = out.get(link, 0.0) + done * resid
+        return out
+
+    def rebase(self, plan: RepairPlan,
+               links: List[Tuple[Link, float]],
+               bank: Dict[Link, float]) -> None:
+        """Migrate onto ``plan``: residual ``links`` (post-credit) become
+        the new work vector and progress restarts at fraction 1 — the
+        banked work lives on in ``bank``."""
+        self.plan = plan
+        self.links = links
+        self.bank = bank
+        self.remaining = 1.0
+        self.nominal = math.inf
+
+    def work_accounting(self,
+                        ) -> Dict[Link, Tuple[float, float, float]]:
+        """Per current-plan link: (banked, outstanding, plan total) — the
+        conservation triple the progress-vector invariant constrains.
+        Banked counts only blocks attributable to this plan's edge (credit
+        at the last (re)plan plus the in-flight lockstep fraction), so
+        banked + outstanding == plan total identically."""
+        resid0 = dict(self.links)
+        done = 1.0 - self.remaining
+        out = {}
+        for link, f in plan_links(self.plan, self.ids):
+            r0 = resid0.get(link, 0.0)
+            credit = f - r0         # blocks credited at the last (re)plan
+            out[link] = (credit + done * r0, self.remaining * r0, f)
+        return out
 
 
 class LinkShareModel:
@@ -124,12 +216,16 @@ class LinkShareModel:
         c = float(self.caps[link])
         return c / (self.users.get(link, 0) + 1)
 
-    def residual_overlay(self, ids: Sequence[int]) -> np.ndarray:
+    def residual_overlay(self, ids: Sequence[int],
+                         exclude: frozenset = frozenset()) -> np.ndarray:
         """(d+1, d+1) overlay capacity matrix for planning a new repair.
 
         Entry [i, j] is the fair share a new flow on physical link
         (ids[i], ids[j]) would get — the "current residual capacity" the
-        flexible policy plans under.
+        flexible policy plans under.  ``exclude`` discounts one existing
+        claim on each named link: when an *in-flight* repair evaluates its
+        own migration, its current occupancy must not be charged against
+        the plans that would replace it.
         """
         idx = np.asarray(ids)
         cap = self.caps[np.ix_(idx, idx)].copy()
@@ -137,10 +233,33 @@ class LinkShareModel:
         for i, u in enumerate(idx):
             for j, v in enumerate(idx):
                 if i != j:
-                    m = self.users.get((int(u), int(v)), 0)
+                    link = (int(u), int(v))
+                    m = self.users.get(link, 0)
+                    if link in exclude and m:
+                        m -= 1
                     if m:
                         cap[i, j] /= (m + 1)
         return cap
+
+    def admission_time(self, links: Sequence[Tuple[Link, float]],
+                       exclude: frozenset = frozenset()) -> float:
+        """Store-and-forward duration the given residual demands would see
+        if admitted *now* (each link charged as one new occupant).  With
+        ``exclude`` = an in-flight repair's current links, this is the
+        migrated-plan ETA the simulator compares against ``eta()``."""
+        t = 0.0
+        for link, f in links:
+            if f <= FLOW_EPS:
+                continue
+            c = float(self.caps[link])
+            m = self.users.get(link, 0)
+            if link in exclude and m:
+                m -= 1
+            s = c / (m + 1)
+            if s <= 0.0:
+                return math.inf
+            t = max(t, f / s)
+        return t
 
     def nominal_time(self, links: Sequence[Tuple[Link, float]]) -> float:
         """Store-and-forward duration of a plan at the current shares."""

@@ -22,8 +22,20 @@ Failure model details:
 * A failed slot's repair regenerates onto a replacement host in the same
   slot, so the capacity matrix is stable across repairs.
 * If an active repair loses a provider to a new failure, it aborts: its
-  links are released, its work is lost, and the slot is requeued with its
-  original failure time (the vulnerability window keeps accruing).
+  links are released and the slot is requeued with its original failure
+  time (the vulnerability window keeps accruing).  With
+  ``Scenario.carryover`` on, the blocks already received from surviving
+  providers travel with the queued slot as a per-link bank; re-admission
+  keeps the surviving providers and credits the bank against the new
+  plan's edge demands, so only the missing flows are re-transferred.
+  With it off (default), the work is lost — the pre-PR-3 dynamics,
+  bitwise.
+* With ``Scenario.migration`` on, every capacity-shock and provider-loss
+  epoch offers the in-flight repairs a re-plan through
+  ``RepairPolicy.replan`` (one batched call, same engine path as
+  admission); a proposal is accepted only if its banked-credited ETA under
+  self-excluded shares beats the current one, so migration never extends a
+  repair's expected finish at decision time.
 * Data-loss accounting: every failure that leaves fewer than k healthy
   slots is a loss event; ``FleetMetrics`` additionally integrates the
   conditional ruin intensity for an MTTDL estimate that works at sane
@@ -37,7 +49,7 @@ then heap order, then the Poisson clock), so a run is bitwise reproducible.
 from __future__ import annotations
 
 import math
-from typing import List, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,9 +61,25 @@ from .events import (CAPACITY_SHOCK, Event, EventQueue, FAILURE,
 from .metrics import FleetMetrics
 from .policy import RepairPolicy
 from .scenario import Scenario
-from .sharing import ActiveRepair, LinkShareModel, plan_links
+from .sharing import (ActiveRepair, Link, LinkShareModel, apply_credit,
+                      plan_links)
 
 _STREAMS = {"caps": 0, "fail": 1, "prov": 2, "read": 3, "shock": 4}
+
+
+class QueuedRepair(NamedTuple):
+    """A slot awaiting (re-)admission.
+
+    ``bank`` carries blocks already received per physical link when a
+    carryover abort requeued the slot (None on a fresh failure);
+    ``survivors`` are the aborted plan's still-useful providers, kept at
+    re-admission so the banked links actually reappear in the new plan.
+    """
+
+    fail_time: float
+    node: int
+    bank: Optional[Dict[Link, float]] = None
+    survivors: Tuple[int, ...] = ()
 
 
 class FleetSimulator:
@@ -78,10 +106,11 @@ class FleetSimulator:
         self.shares = LinkShareModel(self.cluster.caps)
 
         self.now = 0.0
-        self.queue: List[Tuple[float, int]] = []    # (fail_time, slot) FIFO
+        self.queue: List[QueuedRepair] = []         # fail-time-ordered FIFO
         self.active: List[ActiveRepair] = []        # kept in start order
         self.reads: dict = {}
         self._read_seq = 0
+        self._replan_pending = False
 
         self.events = EventQueue()
         for t, node in sorted(scenario.failures):
@@ -107,26 +136,58 @@ class FleetSimulator:
 
     # -- event handlers -----------------------------------------------------
 
-    def _apply_failure(self, node: int) -> None:
+    def _apply_failure(self, node: int) -> bool:
+        """Fail ``node``; returns whether the healthy population actually
+        changed (False for a redundant injection on an already-down slot,
+        in which case the caller must NOT redraw the Poisson clock — a
+        no-op redraw would shift the rng stream and break seeded
+        comparability between scenarios that differ only in a redundant
+        injection)."""
         if self.cluster.state[node] != 0:       # already failed / repairing
-            return
+            return False
         self.cluster.fail(node)
         if self.cluster.num_healthy < self.params.k:
             self.metrics.on_data_loss()
-        self.queue.append((self.now, node))
+        self.queue.append(QueuedRepair(self.now, node))
+        # tear down degraded reads touching the failed node: their links
+        # must not linger as phantom flows until the scheduled departure
+        # (the stale READ_DEPARTURE becomes a no-op when it fires)
+        dead_reads = [rid for rid, links in self.reads.items()
+                      if any(node in link for link, _ in links)]
+        for rid in dead_reads:
+            self.shares.release(self.reads.pop(rid))
         # abort in-flight repairs that lost a provider
         lost = [i for i, r in enumerate(self.active) if node in r.providers]
         for i in reversed(lost):
             r = self.active.pop(i)
             self.shares.release(r.links)
             self.cluster.abort_repair(r.node)
-            self.queue.append((r.fail_time, r.node))
-            self.metrics.on_abort()
+            if self.scenario.carryover:
+                # keep blocks already received — except those parked at the
+                # failed provider itself, which died with its host.  Blocks
+                # it *sent* have already landed downstream and survive.
+                bank = {link: b for link, b in r.banked_now().items()
+                        if link[1] != node}
+                survivors = tuple(p for p in r.providers if p != node)
+                self.queue.append(QueuedRepair(r.fail_time, r.node,
+                                               bank, survivors))
+                self.metrics.on_abort(carryover=True)
+            else:
+                self.queue.append(QueuedRepair(r.fail_time, r.node))
+                self.metrics.on_abort(carryover=False)
         if lost:
             # requeued aborts carry older fail_times than the failure that
             # evicted them; restore oldest-first admission order (stable on
             # ties, so same-time entries keep insertion order)
-            self.queue.sort(key=lambda item: item[0])
+            self.queue.sort(key=lambda q: q.fail_time)
+            self._replan_pending = True
+        # banked blocks sitting *at* the failed node are gone for queued
+        # repairs too (the host is replaced before it can relay them on)
+        for i, q in enumerate(self.queue):
+            if q.bank and any(link[1] == node for link in q.bank):
+                self.queue[i] = q._replace(
+                    bank={l: b for l, b in q.bank.items() if l[1] != node})
+        return True
 
     def _poisson_failure(self) -> None:
         healthy = self.cluster.healthy_nodes()
@@ -155,6 +216,7 @@ class FleetSimulator:
         self.cluster.caps[:] = self.caps_base * mult
         np.fill_diagonal(self.cluster.caps, 0.0)
         self.events.push(Event(self.now + sc.shock_period, CAPACITY_SHOCK))
+        self._replan_pending = True
 
     def _read_arrival(self) -> None:
         sc = self.scenario
@@ -184,42 +246,120 @@ class FleetSimulator:
 
     # -- repair admission ---------------------------------------------------
 
-    def _pick_providers(self, failed: int, healthy: List[int]) -> List[int]:
+    def _pick_providers(self, failed: int, healthy: List[int],
+                        survivors: Sequence[int] = ()) -> List[int]:
+        """Choose d providers.  ``survivors`` (still-healthy providers of a
+        carryover-aborted plan) are kept so the banked links can be
+        re-credited, and only the deficit is drawn fresh; with no survivors
+        the draw is identical to the pre-carryover uniform sample."""
         if self.scenario.provider_picker is not None:
             return list(self.scenario.provider_picker(failed, healthy,
                                                       self.rng["prov"]))
-        idx = self.rng["prov"].choice(len(healthy), size=self.params.d,
+        alive = self.cluster.healthy_set()
+        keep = [s for s in survivors if s in alive][:self.params.d]
+        deficit = self.params.d - len(keep)
+        if not deficit:
+            return keep
+        pool = [h for h in healthy if h not in keep]
+        idx = self.rng["prov"].choice(len(pool), size=deficit,
                                       replace=False)
-        return [healthy[int(i)] for i in idx]
+        return keep + [pool[int(i)] for i in idx]
 
     def _drain_queue(self) -> None:
-        """Start every currently-startable repair, planned as one batch."""
-        startable: List[Tuple[float, int, List[int]]] = []
-        while (self.queue
-               and len(self.active) + len(startable)
-               < self.scenario.max_concurrent):
-            healthy = self.cluster.healthy_nodes()
-            if len(healthy) < self.params.d:
+        """Start every currently-startable repair, planned as one batch.
+
+        A repair whose plan comes back with infinite time (it was routed
+        over a zero-capacity link) must not start: it would hold its links
+        and a ``max_concurrent`` slot forever under static capacities.  It
+        is excluded from this epoch's batch and requeued — a later epoch
+        (new providers, restored capacity) gets to retry it.  Deferral
+        frees the admission slots it held, so the collection loop runs
+        again for the rest of the queue; with no dead overlays (the normal
+        case) exactly one batched planning call is made per epoch.
+        """
+        deferred: List[QueuedRepair] = []
+        while True:
+            startable: List[Tuple[QueuedRepair, List[int]]] = []
+            while (self.queue
+                   and len(self.active) + len(startable)
+                   < self.scenario.max_concurrent):
+                healthy = self.cluster.healthy_nodes()
+                if len(healthy) < self.params.d:
+                    break
+                q = self.queue.pop(0)
+                self.cluster.start_repair(q.node)
+                ids = [q.node] + self._pick_providers(q.node, healthy,
+                                                      q.survivors)
+                if len(set(ids)) != self.params.d + 1:
+                    raise ValueError(
+                        f"provider picker returned {ids[1:]} for slot "
+                        f"{q.node}: need {self.params.d} distinct providers "
+                        f"!= the slot")
+                startable.append((q, ids))
+            if not startable:
                 break
-            fail_t, node = self.queue.pop(0)
-            self.cluster.start_repair(node)
-            ids = [node] + self._pick_providers(node, healthy)
-            if len(set(ids)) != self.params.d + 1:
-                raise ValueError(
-                    f"provider picker returned {ids[1:]} for slot {node}: "
-                    f"need {self.params.d} distinct providers != the slot")
-            startable.append((fail_t, node, ids))
-        if not startable:
-            return
-        overlays = np.stack([self.shares.residual_overlay(ids)
-                             for _, _, ids in startable])
-        plans = self.policy.plan_batch(overlays, self.params)
-        for (fail_t, node, ids), plan in zip(startable, plans):
-            links = plan_links(plan, ids)
-            self.shares.acquire(links)
-            self.active.append(ActiveRepair(
-                node=node, plan=plan, ids=list(ids), links=links,
-                fail_time=fail_t, start_time=self.now))
+            overlays = np.stack([self.shares.residual_overlay(ids)
+                                 for _, ids in startable])
+            plans = self.policy.plan_batch(overlays, self.params)
+            num_deferred = 0
+            for (q, ids), plan in zip(startable, plans):
+                if not math.isfinite(plan.time):
+                    self.cluster.abort_repair(q.node)   # back to FAILED
+                    deferred.append(q)
+                    num_deferred += 1
+                    continue
+                flows = plan_links(plan, ids)
+                if q.bank:
+                    links, credited, total = apply_credit(flows, q.bank)
+                    self.metrics.on_carryover(credited, total)
+                    bank = dict(q.bank)
+                else:
+                    links, bank = flows, {}
+                self.shares.acquire(links)
+                self.active.append(ActiveRepair(
+                    node=q.node, plan=plan, ids=list(ids), links=links,
+                    fail_time=q.fail_time, start_time=self.now, bank=bank))
+            if not num_deferred:
+                break
+        if deferred:
+            self.queue.extend(deferred)
+            self.queue.sort(key=lambda q: q.fail_time)
+
+    # -- in-flight plan migration -------------------------------------------
+
+    def _maybe_replan(self) -> None:
+        """Offer every in-flight repair a migration (one batched
+        ``policy.replan`` call), accepting a proposal only if its
+        banked-credited ETA beats the current one.
+
+        Caller guarantees nominals are fresh (``shares.recompute``).  Each
+        proposal is evaluated under self-excluded shares — the repair's own
+        occupancy is discounted, so staying on a link costs what it costs
+        today and leaving one frees it.  Like admission, proposals are a
+        same-epoch snapshot: an accepted migration changes the shares its
+        successors are judged under (we recompute between accepts), but the
+        overlays the policy planned against are not re-stacked.
+        """
+        overlays = np.stack([
+            self.shares.residual_overlay(
+                r.ids, exclude=frozenset(l for l, _ in r.links))
+            for r in self.active])
+        proposals = self.policy.replan(overlays, self.params)
+        for r, plan in zip(list(self.active), proposals):
+            if plan is None or not math.isfinite(plan.time):
+                continue
+            bank = r.banked_now()
+            links, credited, total = apply_credit(
+                plan_links(plan, r.ids), bank)
+            occupied = frozenset(l for l, _ in r.links)
+            eta_new = self.shares.admission_time(links, exclude=occupied)
+            if eta_new >= r.eta():
+                continue
+            self.shares.release(r.links)
+            r.rebase(plan, links, bank)
+            self.shares.acquire(r.links)
+            self.metrics.on_migration(credited, total)
+            self.shares.recompute(self.active)
 
     # -- main loop ----------------------------------------------------------
 
@@ -272,8 +412,12 @@ class FleetSimulator:
             elif t_exo <= self.next_fail:
                 ev = self.events.pop()
                 if ev.kind == FAILURE:
-                    self._apply_failure(ev.payload[0])
-                    self.next_fail = self._draw_next_fail()
+                    if self._apply_failure(ev.payload[0]):
+                        # redraw only when the healthy population actually
+                        # changed; a redundant injection must not shift the
+                        # Poisson stream (memorylessness keeps the old draw
+                        # exact when the rate is unchanged)
+                        self.next_fail = self._draw_next_fail()
                 elif ev.kind == CAPACITY_SHOCK:
                     self._capacity_shock()
                 elif ev.kind == READ_ARRIVAL:
@@ -282,6 +426,11 @@ class FleetSimulator:
                     self._read_departure(ev.payload[0])
             else:
                 self._poisson_failure()
+            if self._replan_pending:
+                self._replan_pending = False
+                if self.scenario.migration and self.active:
+                    self.shares.recompute(self.active)
+                    self._maybe_replan()
             self._drain_queue()
             self.shares.recompute(self.active)
             self.metrics.observe(self.now,

@@ -11,8 +11,21 @@
 plus degenerate-capacity coverage: near-zero links (the U1[0.3,120] tail),
 exact ties across all links, and zero-capacity links — planners and the
 link-sharing model must never divide by zero or emit negative times.
+
+Repair-lifecycle coverage (ISSUE 3): closed forms for partial-progress
+carryover (a repair that loses a provider resumes from its banked blocks)
+and in-flight plan migration (a capacity shock triggers a credited
+re-plan); the progress-vector conservation property (banked + remaining
+edge work == plan total across arbitrary abort/migration sequences); the
+four fleet-loop bug regressions (redundant-injection rng stability,
+phantom-read teardown on endpoint failure, MTTDL integration past the
+loss boundary, zero-capacity plan deferral); and a bitwise golden guard
+pinning the migration-off quick-bench rows to the pre-lifecycle values.
 """
+import dataclasses
+import json
 import math
+import os
 
 import numpy as np
 import pytest
@@ -20,8 +33,11 @@ import pytest
 from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
                         RepairPlan, SCHEMES, caps_tensor, plan_batch,
                         plan_time, plans_from_batch, tree_flows)
-from repro.fleet import (FixedPolicy, FleetSimulator, FlexiblePolicy,
-                         LinkShareModel, RepairPolicy, Scenario, simulate)
+from repro.fleet import (Event, FixedPolicy, FleetMetrics, FleetSimulator,
+                         FlexiblePolicy, LinkShareModel, RepairPolicy,
+                         Scenario, apply_credit, capacity_weather,
+                         flaky_providers, make_policy, simulate)
+from repro.fleet.events import READ_DEPARTURE
 from repro.storage import uniform_matrix
 
 PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
@@ -288,3 +304,297 @@ def test_plans_from_batch_validate():
         for net, plan in zip(nets, plans):
             plan.validate(net)
             assert plan.scheme == s
+
+
+# ---------------------------------------------------------------------------
+# Partial-progress carryover: closed forms
+# ---------------------------------------------------------------------------
+
+def _relay_bottleneck_model(n=6, c_slow=10.0, c_fast=1e6):
+    """Every link fast except the provider->newcomer edge (5, 0): whichever
+    relay tree the crafted policy builds, (5, 0) is the bottleneck."""
+    caps = np.full((n, n), c_fast)
+    np.fill_diagonal(caps, 0.0)
+    caps[5, 0] = c_slow
+    return caps, (lambda rng, m: caps.copy())
+
+
+def _failover_picker(failed, healthy, rng):
+    return [4, 5] if 4 in healthy else [3, 5]
+
+
+@pytest.mark.parametrize("carryover,expect_vuln", [(True, 0.10),
+                                                   (False, 0.15)])
+def test_carryover_resumes_from_banked_blocks(carryover, expect_vuln):
+    """Relay 4 -> 5 -> 0 with the (5, 0) link as the c=10 bottleneck: the
+    solo plan takes 0.1 s.  Provider 4 dies at t=0.05 with the repair half
+    done — 0.5 blocks are already banked on (5, 0).  With carryover the
+    re-plan (3 -> 5 -> 0, same bottleneck) owes only the missing 0.5
+    blocks and finishes at 0.10; a cold restart re-sends everything and
+    finishes at 0.15."""
+    _, model = _relay_bottleneck_model()
+    sc = Scenario(num_nodes=6, duration=10.0, failure_rate=0.0,
+                  failures=((0.0, 0), (0.05, 4)), capacity_model=model,
+                  provider_picker=_failover_picker, carryover=carryover)
+    m = FleetSimulator(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    # slot 0 plus the failed provider 4 (whose own repair over fast links
+    # is near-instant) both regenerate; slot 0's window is the long one
+    assert m.completed == 2 and m.aborted == 1
+    assert max(m.vulnerability_windows) == pytest.approx(expect_vuln,
+                                                         abs=1e-12)
+    if carryover:
+        assert m.carryover_aborts == 1 and m.cold_aborts == 0
+        # 0.5 banked blocks credited against the 2.0-block re-plan
+        assert m.work_saved == pytest.approx(0.5, abs=1e-12)
+        assert m.credit_fractions == [pytest.approx(0.25, abs=1e-12)]
+    else:
+        assert m.carryover_aborts == 0 and m.cold_aborts == 1
+        assert m.work_saved == 0.0
+
+
+def test_apply_credit_accounting():
+    flows = [((1, 0), 4.0), ((2, 1), 2.0)]
+    bank = {(1, 0): 1.5, (2, 1): 5.0, (9, 0): 7.0}
+    links, credited, total = apply_credit(flows, bank)
+    assert links == [((1, 0), 2.5)]     # (2, 1) fully prepaid drops out
+    assert credited == pytest.approx(3.5) and total == pytest.approx(6.0)
+    assert bank[(9, 0)] == 7.0          # unused entries stay banked
+
+
+# ---------------------------------------------------------------------------
+# In-flight plan migration: closed form at a crafted capacity shock
+# ---------------------------------------------------------------------------
+
+class CraftedBestOfPolicy(RepairPolicy):
+    """Pick the faster of {relay 1 -> 2 -> 0, star} under the given caps —
+    a two-point flexible policy with closed-form times."""
+
+    name = "crafted_best"
+
+    def plan_batch(self, caps, params):
+        plans = []
+        for c in caps:
+            net = OverlayNetwork(c.tolist())
+            cands = []
+            for parent in ({1: 2, 2: 0}, {1: 0, 2: 0}):
+                betas = [1.0, 1.0]
+                flows = tree_flows(parent, betas, params.alpha)
+                p = RepairPlan("crafted", params, parent, betas, flows, 0.0)
+                p.time = plan_time(p, net)
+                cands.append(p)
+            plans.append(min(cands, key=lambda p: p.time))
+        return plans
+
+
+class _OneShockSim(FleetSimulator):
+    """Deterministic shock: at the first CAPACITY_SHOCK event the relay
+    link (4, 5) collapses and the direct link (4, 0) opens up."""
+
+    def _capacity_shock(self):
+        self.cluster.caps[4, 5] = 0.01
+        self.cluster.caps[4, 0] = 100.0
+        self._replan_pending = True
+
+
+@pytest.mark.parametrize("migration,expect_vuln", [(True, 0.015),
+                                                   (False, 50.005)])
+def test_migration_escapes_gutted_bottleneck(migration, expect_vuln):
+    """Relay 4 -> 5 -> 0 is the fast plan (0.01 s) until the shock at
+    t=0.005 guts (4, 5) to 0.01 b/s; the repair is half done.  With
+    migration it re-plans to the now-open star, credits the 0.5 blocks
+    already banked on (5, 0), and finishes 0.01 s after the shock; frozen
+    plans crawl the remaining 0.5 blocks at 0.01 b/s for 50 s."""
+    n = 6
+    caps = np.full((n, n), 100.0)
+    np.fill_diagonal(caps, 0.0)
+    caps[4, 0] = 0.1                    # direct path closed pre-shock
+    model = (lambda rng, m: caps.copy())
+    sc = Scenario(num_nodes=n, duration=100.0, failure_rate=0.0,
+                  failures=((0.0, 0),), capacity_model=model,
+                  provider_picker=_shared_pair_picker,
+                  shock_period=0.005, migration=migration, carryover=True)
+    m = _OneShockSim(sc, CraftedBestOfPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m.completed == 1 and m.aborted == 0
+    assert m.vulnerability_windows == [pytest.approx(expect_vuln,
+                                                     rel=1e-12)]
+    if migration:
+        assert m.migrations == 1
+        # 0.5 banked blocks credited against the 2.0-block star plan
+        assert m.work_saved == pytest.approx(0.5, abs=1e-12)
+        assert m.credit_fractions == [pytest.approx(0.25, abs=1e-12)]
+    else:
+        assert m.migrations == 0
+
+
+# ---------------------------------------------------------------------------
+# Conservation: banked + remaining edge work == plan total, always
+# ---------------------------------------------------------------------------
+
+class _ConservationSim(FleetSimulator):
+    checks = 0
+
+    def _advance(self, t):
+        super()._advance(t)
+        for r in self.active:
+            for link, (banked, todo, total) in r.work_accounting().items():
+                assert banked >= -1e-9 and todo >= -1e-9, (link, banked,
+                                                           todo)
+                assert abs(banked + todo - total) <= 1e-9 * max(1.0, total)
+            type(self).checks += 1
+
+
+def test_progress_vector_conservation_under_aborts_and_migrations():
+    """Across seeded abort/carryover/migration sequences, every in-flight
+    repair's banked-plus-outstanding work equals its current plan's edge
+    totals at every event epoch — credit transfer neither creates nor
+    destroys work."""
+    params = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+    sc = dataclasses.replace(flaky_providers(12, duration=1200.0),
+                             carryover=True, migration=True)
+    aborted = migrations = 0
+    for seed in (0, 1):
+        m = _ConservationSim(sc, FlexiblePolicy(), params, seed=seed).run()
+        aborted += m.aborted
+        migrations += m.migrations
+    assert _ConservationSim.checks > 200       # the invariant was exercised
+    assert aborted > 0 and migrations > 0      # ... on the paths that matter
+
+
+# ---------------------------------------------------------------------------
+# Fleet-loop bug regressions (ISSUE 3 satellites)
+# ---------------------------------------------------------------------------
+
+def test_redundant_injected_failure_keeps_poisson_stream():
+    """A FAILURE injection colliding with an already-down slot is a no-op
+    and must not redraw the Poisson clock: two scenarios differing only in
+    the redundant injection stay event-for-event identical."""
+    n = 10
+    caps = np.full((n, n), 10.0)
+    np.fill_diagonal(caps, 0.0)
+    model = (lambda rng, m: caps.copy())
+    base = dict(num_nodes=n, duration=3000.0, failure_rate=1e-3,
+                capacity_model=model)
+    only = Scenario(failures=((5.0, 0),), **base)
+    redundant = Scenario(failures=((5.0, 0), (6.0, 0)), **base)
+    ma = simulate(only, FixedPolicy("star"), PARAMS, seed=7)
+    mb = simulate(redundant, FixedPolicy("star"), PARAMS, seed=7)
+    assert ma == mb
+
+
+def test_failed_read_endpoint_releases_links():
+    """Degraded reads whose source or destination fails are torn down with
+    the node: their links must not linger as phantom flows.  A read into
+    node 0 shares the repair's (5, 0) bottleneck — after node 0 fails, the
+    repair must see the full solo share (0.1 s), not half of it."""
+    _, model = _relay_bottleneck_model()
+    sc = Scenario(num_nodes=6, duration=2000.0, failure_rate=0.0,
+                  failures=((10.0, 0),), capacity_model=model,
+                  provider_picker=_shared_pair_picker)
+    sim = FleetSimulator(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0)
+    into = [((5, 0), 1.0)]              # destination 0 fails
+    outof = [((0, 3), 1.0)]             # source 0 fails
+    for rid, links in ((101, into), (102, outof)):
+        sim.shares.acquire(links)
+        sim.reads[rid] = links
+        sim.events.push(Event(1000.0, READ_DEPARTURE, (rid,)))
+    m = sim.run()
+    assert m.completed == 1
+    assert m.regen_times[0] == pytest.approx(0.1, abs=1e-12)
+    assert sim.reads == {} and sim.shares.users == {}   # stale departures
+    #                                                     were no-ops
+
+
+def test_mttdl_integrates_past_loss_boundary():
+    """expected_losses accrues the conditional ruin intensity for every
+    state at or past unavailable == n - k, not only at equality."""
+    m = FleetMetrics(n=6, k=2, failure_rate=0.1)
+    m.observe(0.0, 0, 4)                # at the boundary (n - k = 4)
+    m.observe(2.0, 0, 5)                # past it: one node left
+    m.observe(5.0, 0, 0)
+    assert m.at_risk_time == pytest.approx(2.0)
+    # [0, 2): rate 0.1 * 2 healthy; [2, 5): rate 0.1 * 1 healthy
+    assert m.expected_losses == pytest.approx(0.1 * 2 * 2 + 0.1 * 1 * 3)
+    assert m.summary()["mttdl_estimate"] == pytest.approx(5.0 / 0.7)
+
+
+def _zero_link_picker(failed, healthy, rng):
+    return [4, 5] if failed == 0 else [2, 3]
+
+
+def test_zero_capacity_plan_defers_instead_of_wedging():
+    """A repair planned onto a zero-capacity link (infinite plan time)
+    must not start: under static capacities it would hold its links and a
+    max_concurrent slot forever.  It is requeued, and — crucially — its
+    deferral frees the admission slot within the same epoch, so the next
+    queued repair still starts."""
+    n = 6
+    caps = np.full((n, n), 100.0)
+    np.fill_diagonal(caps, 0.0)
+    caps[5, 0] = 0.0                    # slot 0's plans all route over this
+    model = (lambda rng, m: caps.copy())
+    sc = Scenario(num_nodes=n, duration=5.0, failure_rate=0.0,
+                  failures=((0.0, 0), (0.0, 1)), capacity_model=model,
+                  provider_picker=_zero_link_picker, max_concurrent=1)
+    sim = FleetSimulator(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0)
+    m = sim.run()
+    assert m.completed == 1             # node 1 was not starved
+    assert m.regen_times == [pytest.approx(0.01, abs=1e-12)]
+    assert sim.active == []             # the dead repair never started ...
+    assert [q.node for q in sim.queue] == [0]   # ... and is still queued
+    assert sim.shares.users == {}       # holding no links
+    assert math.isfinite(m.summary()["mean_backlog"])
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle acceptance: migration + carryover tighten the stress scenarios
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_tightens_flaky_and_weather():
+    """On the abort-heavy flaky_providers scenario and a storm-grade
+    capacity_weather (fast deep shocks over slow links), turning on
+    carryover + migration must not worsen mean backlog or the p99
+    vulnerability window for the flexible policy."""
+    cases = [
+        ("flaky_providers", flaky_providers(16), 0),
+        ("capacity_weather",
+         capacity_weather(16, failure_rate=3e-3, duration=2500.0,
+                          shock_period=10.0, shock_lo=0.02,
+                          cap_lo=1.0, cap_hi=30.0), 3),
+    ]
+    for name, sc, seed in cases:
+        base = simulate(sc, FlexiblePolicy(), PARAMS, seed=seed)
+        on = simulate(dataclasses.replace(sc, carryover=True,
+                                          migration=True),
+                      FlexiblePolicy(), PARAMS, seed=seed)
+        assert on["mean_backlog"] <= base["mean_backlog"], name
+        assert on["vulnerability_p99"] <= base["vulnerability_p99"], name
+        assert on["migrations"] > 0 and on["carryover_aborts"] > 0, name
+        assert on["cold_aborts"] == 0, name
+        assert on["aborted"] == on["carryover_aborts"], name
+        assert 0.0 < on["work_saved_fraction"] <= 1.0, name
+        assert base["migrations"] == 0 and base["work_saved_blocks"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Bitwise guard: the migration-off default path reproduces the golden rows
+# ---------------------------------------------------------------------------
+
+def test_default_path_matches_golden_quick_rows():
+    """With carryover and migration off, the quick-bench configurations
+    reproduce benchmarks/golden/fleet_quick_seed0.json exactly — every
+    summary value bitwise equal.  The legacy rows in that file are pinned
+    to their pre-lifecycle (PR 2) values."""
+    import benchmarks.fleet_scale as fs
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "benchmarks", "golden",
+                           "fleet_quick_seed0.json")) as f:
+        golden = json.load(f)
+    sweep = {name: (sc, pol) for name, sc, pol in fs._sweep(quick=True)}
+    assert set(golden["configs"]) <= set(sweep)
+    for name, expect in golden["configs"].items():
+        sc, pol = sweep[name]
+        assert not (sc.carryover or sc.migration), name
+        got = simulate(sc, make_policy(pol), fs._params(),
+                       seed=fs._config_seed(golden["root_seed"], name))
+        assert got == expect, name
