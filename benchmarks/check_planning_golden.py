@@ -1,0 +1,71 @@
+"""CI guard: the deterministic plan values of a quick planning run must be
+bitwise identical to the checked-in golden.
+
+Usage (after ``python -m benchmarks.run --quick --seed 0 --modules planning``):
+
+    python benchmarks/check_planning_golden.py
+
+Compares the ``plans`` section of ``BENCH_planning.json`` (per-point
+norm_time / norm_traffic / time_s for fig6/7/8; no wall-time fields)
+against ``benchmarks/golden/planning_quick_seed0.json``.  Any diff means an
+engine refactor changed the *plans*, not just their speed — that must be a
+deliberate, golden-regenerating change, never a silent one.  The exact
+witness oracle is what makes this pin possible: the old per-trial HiGHS
+witness carried solver-internal vertex choices that were not guaranteed
+reproducible across scipy builds.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO_ROOT, "benchmarks", "golden",
+                      "planning_quick_seed0.json")
+CURRENT = os.path.join(REPO_ROOT, "BENCH_planning.json")
+
+
+def _leaves(prefix: str, node):
+    if isinstance(node, dict):
+        for key in sorted(node):
+            yield from _leaves(f"{prefix}.{key}", node[key])
+    elif isinstance(node, list):
+        for i, item in enumerate(node):
+            yield from _leaves(f"{prefix}[{i}]", item)
+    else:
+        yield prefix, node
+
+
+def main() -> int:
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    with open(CURRENT) as f:
+        got = json.load(f)
+    for key in ("quick", "seed"):
+        if got.get(key) != golden[key]:
+            print(f"FAIL: run {key}={got.get(key)!r} does not match the "
+                  f"golden's {key}={golden[key]!r}; run "
+                  f"`python -m benchmarks.run --quick --seed {golden['seed']}"
+                  f" --modules planning` first")
+            return 1
+    want = dict(_leaves("plans", golden["plans"]))
+    have = dict(_leaves("plans", got.get("plans", {})))
+    missing = [k for k in want if k not in have]
+    diffs = [(k, want[k], have[k]) for k in want
+             if k in have and have[k] != want[k]]
+    if missing:
+        print(f"FAIL: {len(missing)} golden values missing from this run "
+              f"(first: {missing[0]})")
+    for k, w, h in diffs[:20]:
+        print(f"FAIL: {k}: golden {w!r} != got {h!r}")
+    if missing or diffs:
+        print(f"planning golden guard: {len(diffs)} diffs, "
+              f"{len(missing)} missing of {len(want)} values")
+        return 1
+    print(f"planning golden guard OK: {len(want)} values bitwise equal")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

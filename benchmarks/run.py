@@ -1,15 +1,20 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Set ``BENCH_QUICK=1`` in the
-environment for a fast smoke pass (fewer shapes / Monte-Carlo batches of 80
-instead of 120 trials); every run also writes JSON artifacts under
-``benchmarks/artifacts/`` (consumed by EXPERIMENTS.md).
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` (or ``BENCH_QUICK=1``
+in the environment) selects a fast smoke pass (fewer shapes / Monte-Carlo
+batches of 80 instead of 120 trials), ``--seed`` (or ``BENCH_SEED``) the
+root seed, and ``--modules`` restricts the run to a subset (``planning`` is
+an alias for the fig6/7/8 trio CI uses); every run also writes JSON
+artifacts under ``benchmarks/artifacts/`` (consumed by EXPERIMENTS.md).
 
 Every run additionally consolidates the planning-relevant results into
 ``BENCH_planning.json`` at the repo root — per-figure-row ``us_per_call``
 plus per-scheme mean planner wall time (``plan_ms``) aggregated from the
-fig6/fig7/fig8 artifacts — so the perf trajectory of the batched planning
-engine (repro.core.batched) is machine-trackable across PRs.
+fig6/fig7/fig8 artifacts, and a ``plans`` section with the *deterministic*
+per-point plan values (norm_time / norm_traffic / time_s; no timings) that
+``benchmarks/golden/planning_quick_seed0.json`` pins bitwise in CI — so
+both the perf trajectory and the planned values of the batched planning
+engine (repro.core.batched) are machine-trackable across PRs.
 
 Modules:
   fig6_d_sweep    — Fig. 6 (regeneration time & bandwidth vs d)
@@ -28,6 +33,7 @@ reproducible across runs on the same machine.
 """
 from __future__ import annotations
 
+import argparse
 import importlib
 import inspect
 import json
@@ -72,9 +78,39 @@ def _scheme_plan_ms(ran_modules) -> dict:
     return {s: sum(v) / len(v) for s, v in acc.items() if v}
 
 
+def _plan_values(ran_modules) -> dict:
+    """Deterministic per-point plan values from THIS run's fig6/7/8
+    artifacts: everything except the wall-time fields.  These are pure
+    functions of (seed, quick) — the exact witness oracle has no solver
+    noise — so CI pins them bitwise (benchmarks/golden/)."""
+    from .common import ARTIFACT_DIR
+
+    out: dict = {}
+    for mod in PLANNING_MODULES:
+        if mod not in ran_modules:
+            continue
+        path = os.path.join(ARTIFACT_DIR, f"{mod}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            data = json.load(f)
+        pts = []
+        for point in data.get("points", []):
+            pt = {}
+            for key, vals in point.items():
+                if isinstance(vals, dict):
+                    pt[key] = {m: v for m, v in vals.items() if m != "plan_ms"}
+                else:
+                    pt[key] = vals
+            pts.append(pt)
+        out[mod] = pts
+    return out
+
+
 def _write_planning_summary(rows_by_module: dict) -> None:
     summary = {
         "quick": os.environ.get("BENCH_QUICK", "0") == "1",
+        "seed": int(os.environ.get("BENCH_SEED", "0")),
         "rows": {
             r["name"]: round(r["us_per_call"], 3)
             for mod in PLANNING_MODULES
@@ -82,18 +118,48 @@ def _write_planning_summary(rows_by_module: dict) -> None:
         },
         "schemes": {s: {"plan_ms": round(ms, 4)}
                     for s, ms in _scheme_plan_ms(rows_by_module).items()},
+        "plans": _plan_values(rows_by_module),
     }
     path = os.path.join(REPO_ROOT, "BENCH_planning.json")
     with open(path, "w") as f:
         json.dump(summary, f, indent=2, sort_keys=True)
 
 
-def main() -> None:
+def _parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(
+        description="run the benchmark modules (CSV to stdout, JSON "
+                    "artifacts under benchmarks/artifacts/)")
+    ap.add_argument("--quick", action="store_true",
+                    help="fast smoke pass (same as BENCH_QUICK=1)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="root seed (same as BENCH_SEED; default 0)")
+    ap.add_argument("--modules", nargs="+", default=None, metavar="MOD",
+                    help="subset of modules to run; 'planning' expands to "
+                         f"{'/'.join(PLANNING_MODULES)}")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
+    args = _parse_args(argv)
+    # the flags are sugar over the env vars every module already reads
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+    if args.seed is not None:
+        os.environ["BENCH_SEED"] = str(args.seed)
+    modules = MODULES
+    if args.modules is not None:
+        modules = []
+        for m in args.modules:
+            modules.extend(PLANNING_MODULES if m == "planning" else [m])
+        unknown = [m for m in modules if m not in MODULES]
+        if unknown:
+            raise SystemExit(f"unknown benchmark modules {unknown}; "
+                             f"available: {MODULES}")
     print("name,us_per_call,derived")
     root_seed = int(os.environ.get("BENCH_SEED", "0"))
     failures = []
     rows_by_module: dict = {}
-    for mod_name in MODULES:
+    for mod_name in modules:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
         except ModuleNotFoundError as e:
@@ -112,11 +178,17 @@ def main() -> None:
         except Exception:
             failures.append(mod_name)
             traceback.print_exc()
-    try:
-        _write_planning_summary(rows_by_module)
-    except Exception:
-        failures.append("BENCH_planning.json")
-        traceback.print_exc()
+    if any(m in rows_by_module for m in PLANNING_MODULES):
+        try:
+            _write_planning_summary(rows_by_module)
+        except Exception:
+            failures.append("BENCH_planning.json")
+            traceback.print_exc()
+    else:
+        # a --modules run without any fig6/7/8 module must not clobber the
+        # tracked BENCH_planning.json with an empty summary
+        print("note: no planning module ran; BENCH_planning.json untouched",
+              file=sys.stderr)
     if failures:
         raise SystemExit(f"benchmark modules failed: {failures}")
 

@@ -58,3 +58,8 @@ __all__ += ["BATCHED_SCHEMES", "BatchPlanResult", "caps_tensor",
             "minmax_time_star_batch", "plan_batch", "plan_fr_batch",
             "plan_ftr_batch", "plan_star_batch", "plan_tr_batch",
             "plans_from_batch", "tree_optimal_time_batch"]
+
+from .witness import (level_cut, level_cut_batch, min_traffic_batch,
+                      tree_traffic_batch)
+__all__ += ["level_cut", "level_cut_batch", "min_traffic_batch",
+            "tree_traffic_batch"]

@@ -41,10 +41,12 @@ def _edge_caps(parent: Dict[int, int], net: OverlayNetwork) -> Dict[Edge, float]
 
 def eval_tree(parent: Dict[int, int], net: OverlayNetwork, params: CodeParams,
               region: FeasibleRegion, iters: int = EVAL_ITERS,
-              use_lp: bool = False,
+              minimize_traffic: bool = False, witness: str = "exact",
               ) -> Tuple[float, Optional[List[float]]]:
     return lp.tree_optimal_time(parent, _edge_caps(parent, net), region,
-                                params.alpha, iters=iters, use_lp=use_lp)
+                                params.alpha, iters=iters,
+                                minimize_traffic=minimize_traffic,
+                                witness=witness)
 
 
 def _grow_core(net: OverlayNetwork, i: int, d: int) -> List[int]:
@@ -149,8 +151,14 @@ def _local_search(parent: Dict[int, int], net: OverlayNetwork,
 def plan_ftr(net: OverlayNetwork, params: CodeParams,
              region: FeasibleRegion | None = None,
              core_sizes: Optional[List[int]] = None,
-             local_search: bool = True) -> RepairPlan:
-    """Algorithm 2 over all core sizes i, plus the TR tree as a candidate."""
+             local_search: bool = True,
+             witness: str = "exact") -> RepairPlan:
+    """Algorithm 2 over all core sizes i, plus the TR tree as a candidate.
+
+    ``witness`` picks the final traffic-minimal witness engine: the exact
+    level-cut oracle (default) or the scipy LP (``witness="lp"``)."""
+    if witness not in ("exact", "lp"):   # eager: fail before the tree search
+        raise ValueError(f"unknown witness engine {witness!r}")
     d = params.d
     if region is None:
         region = msr_region(params) if params.is_msr else heuristic_region(params)
@@ -191,10 +199,11 @@ def plan_ftr(net: OverlayNetwork, params: CodeParams,
                 best_parent, best_t = dict(cand), t
 
     assert best_parent is not None
-    # final high-precision solve on the winning tree (LP for the
-    # traffic-minimal witness at the optimal time)
+    # final high-precision solve on the winning tree, then the
+    # traffic-minimal witness at the optimal time
     t_star, betas = eval_tree(best_parent, net, params, region,
-                              iters=FINAL_ITERS, use_lp=True)
+                              iters=FINAL_ITERS, minimize_traffic=True,
+                              witness=witness)
     if betas is None:  # pragma: no cover - winning tree is feasible by search
         raise RuntimeError("FTR: winning tree lost feasibility at final solve")
     flows = tree_flows(best_parent, betas, params.alpha)

@@ -10,8 +10,10 @@ Key building blocks:
 
 * ``min_traffic_at_time`` — secondary objective: minimize total generated
   traffic sum(beta) at the optimal time (the min-max LP has many optima; the
-  executor prefers the cheapest).  Solved with scipy's HiGHS via the exact
-  LP-dual encoding of "sum of the m smallest >= x":
+  executor prefers the cheapest).  Solved exactly and LP-free by the
+  level-cut oracle (``repro.core.witness``); ``witness="lp"`` falls back to
+  scipy's HiGHS via the exact LP-dual encoding of "sum of the m smallest
+  >= x":
 
       exists lam (free), mu_i >= 0:  m*lam - sum_i mu_i >= x,
                                      lam - mu_i <= beta_i  for all i.
@@ -38,6 +40,7 @@ except Exception:  # pragma: no cover
 
 from .params import CodeParams, Edge
 from .regions import FeasibleRegion, sigma
+from . import witness as _witness
 
 BISECT_ITERS = 60   # star bisection depth (shared with repro.core.batched)
 _BISECT_ITERS = BISECT_ITERS
@@ -78,15 +81,22 @@ def minmax_time_star(caps: Sequence[float], region: FeasibleRegion,
 
 
 def min_traffic_at_time(t: float, caps: Sequence[float], region: FeasibleRegion,
-                        alpha: float) -> List[float]:
-    """Min sum(beta) subject to beta in region, 0 <= beta_i <= min(t*c_i, alpha)."""
-    d = len(caps)
+                        alpha: float, witness: str = "exact") -> List[float]:
+    """Min sum(beta) subject to beta in region, 0 <= beta_i <= min(t*c_i, alpha).
+
+    ``witness="exact"`` (default) is the LP-free level-cut oracle
+    (:mod:`repro.core.witness`); ``witness="lp"`` keeps the scipy/HiGHS
+    solve as the correctness oracle (falls through to the exact oracle when
+    scipy is absent or the LP fails at the feasibility boundary).
+    """
+    if witness not in ("exact", "lp"):
+        raise ValueError(f"unknown witness engine {witness!r}")
     ub = [min(t * c, alpha) for c in caps]
-    if HAVE_SCIPY:
+    if witness == "lp" and HAVE_SCIPY:
         sol = _min_traffic_lp(ub, region)
         if sol is not None:
             return sol
-    return _min_traffic_greedy(ub, region)
+    return _witness.level_cut(ub, region)
 
 
 def _min_traffic_lp(ub: Sequence[float], region: FeasibleRegion) -> Optional[List[float]]:
@@ -122,26 +132,6 @@ def _min_traffic_lp(ub: Sequence[float], region: FeasibleRegion) -> Optional[Lis
     # numerical safety: if a sigma constraint is violated by rounding, nudge up
     if not region.contains(beta, tol=1e-7):
         return None
-    return beta
-
-
-def _min_traffic_greedy(ub: Sequence[float], region: FeasibleRegion) -> List[float]:
-    """Fallback: start at the coordinate-wise max point and greedily shrink
-    coordinates (largest first) to the minimum keeping the region constraints."""
-    beta = list(ub)
-    if not region.contains(beta, tol=1e-9):
-        raise ValueError("infeasible even at the coordinate-wise max point")
-    order = sorted(range(len(beta)), key=lambda i: -beta[i])
-    for i in order:
-        lo_v, hi_v = 0.0, beta[i]
-        for _ in range(50):
-            mid = 0.5 * (lo_v + hi_v)
-            beta[i] = mid
-            if region.contains(beta, tol=1e-12):
-                hi_v = mid
-            else:
-                lo_v = mid
-        beta[i] = hi_v
     return beta
 
 
@@ -226,7 +216,8 @@ def _subtree_sets(parent: Dict[int, int], d: int) -> Dict[int, List[int]]:
 def tree_feasible_at_time(t: float, parent: Dict[int, int],
                           cap_of_edge: Dict[Edge, float],
                           region: FeasibleRegion, alpha: float,
-                          use_lp: bool = False) -> Optional[List[float]]:
+                          minimize_traffic: bool = False,
+                          witness: str = "exact") -> Optional[List[float]]:
     """Feasibility oracle: is there beta >= 0 in ``region`` such that every
     tree edge carries min(subtree-sum, alpha) <= t * c(edge)?  Returns a
     witness beta (len d) or None.
@@ -236,9 +227,13 @@ def tree_feasible_at_time(t: float, parent: Dict[int, int],
       * t*c <  alpha  -> sum_{x in S(u)} beta_x <= t*c
 
     Default oracle is the exact water-fill (leximin maximizes every sigma_j
-    over the laminar polytope); ``use_lp=True`` additionally minimizes total
-    traffic among feasible witnesses via scipy (used for the final plan).
+    over the laminar polytope); ``minimize_traffic=True`` additionally
+    minimizes total traffic among feasible witnesses (used for the final
+    plan) — by the exact level cut of the water-fill point, or via the
+    scipy LP when ``witness="lp"``.
     """
+    if witness not in ("exact", "lp"):
+        raise ValueError(f"unknown witness engine {witness!r}")
     d = region.d
     subs = _subtree_sets(parent, d)
     caps: List[Tuple[List[int], float]] = []  # (subtree provider list, bound)
@@ -251,13 +246,17 @@ def tree_feasible_at_time(t: float, parent: Dict[int, int],
     # per-provider implicit cap beta_i <= alpha
     ub = [alpha] * d
 
-    if use_lp and HAVE_SCIPY:
-        # exact oracle + traffic-minimal witness
+    if minimize_traffic and witness == "lp" and HAVE_SCIPY:
+        # exact LP oracle + solver-chosen traffic-minimal vertex
         return _tree_lp(caps, ub, region)
     wf = waterfill_max(ub, [([x - 1 for x in S], B) for S, B in caps])
-    if region.contains(wf, tol=1e-9):
-        return wf
-    return None
+    if not region.contains(wf, tol=1e-9):
+        return None
+    if minimize_traffic:
+        # a uniform level cap commutes with the water-fill (freeze levels
+        # only rise), so the traffic-minimal point is a level cut of wf
+        return _witness.tree_min_traffic(wf, region)
+    return wf
 
 
 def _tree_lp(caps, ub, region: FeasibleRegion) -> Optional[List[float]]:
@@ -297,39 +296,16 @@ def _tree_lp(caps, ub, region: FeasibleRegion) -> Optional[List[float]]:
     return beta
 
 
-def _tree_greedy(caps, ub, region: FeasibleRegion) -> Optional[List[float]]:
-    """Fallback oracle without scipy: water-fill a common level subject to the
-    laminar caps, then verify.  Conservative (may miss feasible points)."""
-    d = region.d
-    lo, hi = 0.0, max(ub)
-    best = None
-    for _ in range(50):
-        lvl = 0.5 * (lo + hi)
-        beta = [min(lvl, ub[i]) for i in range(d)]
-        ok = True
-        # laminar caps, tightest-first: scale subtree members down
-        for nodes, bound in sorted(caps, key=lambda cb: len(cb[0])):
-            s = sum(beta[x - 1] for x in nodes)
-            if s > bound:
-                scale = bound / s if s > 0 else 0.0
-                for x in nodes:
-                    beta[x - 1] *= scale
-        if region.contains(beta, tol=1e-9):
-            best = beta
-            lo = lvl
-        else:
-            hi = lvl
-    return best
-
-
 def tree_optimal_time(parent: Dict[int, int], cap_of_edge: Dict[Edge, float],
                       region: FeasibleRegion, alpha: float,
-                      iters: int = 40, use_lp: bool = False,
+                      iters: int = 40, minimize_traffic: bool = False,
+                      witness: str = "exact",
                       ) -> Tuple[float, Optional[List[float]]]:
     """Problem (5): min t such that a feasible beta exists on this tree.
 
-    Bisection with the water-fill oracle; ``use_lp=True`` extracts the
-    traffic-minimal witness at the final time via scipy.
+    Bisection with the water-fill oracle; ``minimize_traffic=True`` extracts
+    the traffic-minimal witness at the final time (exact level cut by
+    default, scipy's vertex with ``witness="lp"``).
     """
     pos = [c for c in cap_of_edge.values()]
     if any(c <= 0 for c in pos):
@@ -351,9 +327,9 @@ def tree_optimal_time(parent: Dict[int, int], cap_of_edge: Dict[Edge, float],
             hi, beta = mid, w
         else:
             lo = mid
-    if use_lp:
+    if minimize_traffic:
         w = tree_feasible_at_time(hi, parent, cap_of_edge, region, alpha,
-                                  use_lp=True)
+                                  minimize_traffic=True, witness=witness)
         if w is not None:
             beta = w
     if beta is None:

@@ -59,10 +59,20 @@ def fr_closed_form_msr(caps: List[float], params: CodeParams) -> List[float]:
 
 def plan_fr(net: OverlayNetwork, params: CodeParams,
             region: FeasibleRegion | None = None,
-            minimize_traffic: bool = True) -> RepairPlan:
+            minimize_traffic: bool = True,
+            witness: str = "exact") -> RepairPlan:
     """Flexible Regeneration: star topology, non-uniform beta chosen from the
     (maximum at MSR / heuristic otherwise) feasible region by solving the
-    min-max problem (1)."""
+    min-max problem (1).
+
+    ``witness`` picks the traffic-minimal witness engine at the optimal
+    time: the exact level-cut oracle (default) or the scipy LP
+    (``witness="lp"``, kept as the correctness oracle).
+    """
+    # eager, like the batched planner: the MSR closed form never consults
+    # the witness engine, so a typo would otherwise pass silently
+    if witness not in ("exact", "lp"):
+        raise ValueError(f"unknown witness engine {witness!r}")
     d = params.d
     caps = net.direct_caps()
     if region is None:
@@ -75,11 +85,13 @@ def plan_fr(net: OverlayNetwork, params: CodeParams,
         t_star = lp.minmax_time_star(caps, region, params.alpha)
         if t_star < time * (1 - 1e-9):  # pragma: no cover - closed form is optimal
             time = t_star
-            betas = lp.min_traffic_at_time(t_star, caps, region, params.alpha)
+            betas = lp.min_traffic_at_time(t_star, caps, region, params.alpha,
+                                           witness=witness)
     else:
         time = lp.minmax_time_star(caps, region, params.alpha)
         if minimize_traffic:
-            betas = lp.min_traffic_at_time(time, caps, region, params.alpha)
+            betas = lp.min_traffic_at_time(time, caps, region, params.alpha,
+                                           witness=witness)
         else:
             betas = [min(time * c, params.alpha) for c in caps]
 

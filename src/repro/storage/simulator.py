@@ -57,9 +57,13 @@ def _warn_scalar_fallback(scheme: str) -> None:
             f"(see SchemeStats.engine)", RuntimeWarning, stacklevel=3)
 
 
+_WITNESS_SCHEMES = ("fr", "ftr")   # schemes whose planners take ``witness``
+
+
 def compare_schemes(params: CodeParams, sampler: CapSampler,
                     schemes: Sequence[str], trials: int,
                     seed: int = 0, engine: str = "batched",
+                    witness: str = "exact",
                     ) -> Dict[str, SchemeStats]:
     """Monte-Carlo scheme comparison over ``trials`` sampled overlays.
 
@@ -67,7 +71,9 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
     vectorized engine in :mod:`repro.core.batched`; schemes without a batched
     planner (shah, rctree) transparently fall back to the scalar path.
     ``engine="scalar"`` is the original per-network loop, kept as the
-    correctness oracle (see tests/test_batched.py).
+    correctness oracle (see tests/test_batched.py).  ``witness`` selects the
+    traffic-minimal witness engine for fr/ftr: the exact level-cut oracle
+    (default) or the per-trial scipy LP (``witness="lp"``).
     """
     import time as _time
 
@@ -75,6 +81,9 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
         raise ValueError(f"unknown engine {engine!r}")
     rng = random.Random(seed)
     nets = [sampler(rng, params.d) for _ in range(trials)]
+
+    def _kw(s):
+        return {"witness": witness} if s in _WITNESS_SCHEMES else {}
 
     if engine == "batched":
         caps = caps_tensor(nets)
@@ -84,7 +93,7 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
             t0 = _time.perf_counter()
             if s in BATCHED_SCHEMES:
                 used = "batched"
-                res = BATCHED_SCHEMES[s](caps, params)
+                res = BATCHED_SCHEMES[s](caps, params, **_kw(s))
                 times, traffic = res.times, res.traffic
             else:  # scalar fallback for schemes not vectorized yet
                 used = "scalar"
@@ -105,7 +114,7 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
         base = SCHEMES["star"](net, params)
         for s in schemes:
             t0 = _time.perf_counter()
-            plan = SCHEMES[s](net, params)
+            plan = SCHEMES[s](net, params, **_kw(s))
             dt = _time.perf_counter() - t0
             a = acc[s]
             a[0] += plan.time

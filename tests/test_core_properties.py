@@ -188,7 +188,7 @@ def test_waterfill_oracle_matches_lp(seed):
         t = t_mult * p.beta / max(caps.values())
         wf = tree_feasible_at_time(t, parent, caps, region, p.alpha)
         lp_w = tree_feasible_at_time(t, parent, caps, region, p.alpha,
-                                     use_lp=True)
+                                     minimize_traffic=True, witness="lp")
         assert (wf is None) == (lp_w is None), (
             f"oracle disagreement at t={t}: wf={wf} lp={lp_w}")
 

@@ -1,0 +1,334 @@
+"""Exact min-traffic witness oracle vs the scipy/HiGHS LP (repro.core.witness).
+
+Equivalence contract (see the witness module docstring):
+
+* star case — at the planners' query time (the bisection optimum of problem
+  (1)) the level-cut point coincides with HiGHS's vertex choice *per edge*
+  to 1e-9; at strictly-interior times the optimal face can be degenerate
+  (e.g. k=1, where only the total binds) and only the objective is pinned.
+* tree case — the level cut of the water-fill witness attains the LP
+  optimum of sum(beta) and the same repair time; on degenerate faces HiGHS
+  may return a different optimal vertex, so per-edge equality is asserted
+  against the batched oracle (bitwise determinism), not against the solver.
+
+The sweep covers MSR / interior / MBR operating points and degenerate
+capacities: exact ties, zero-capacity links, and the single-helper code
+(k = d = 1).  A seeded deterministic sweep always runs; the hypothesis
+property test widens it when hypothesis is installed (CI always has it).
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import CodeParams, mbr_point
+from repro.core import lp
+from repro.core import witness as wit
+from repro.core.lp import HAVE_SCIPY
+from repro.core.regions import FeasibleRegion, heuristic_region, msr_region
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal local env; CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+needs_scipy = pytest.mark.skipif(not HAVE_SCIPY, reason="scipy unavailable")
+
+
+# ---------------------------------------------------------------------------
+# Instance family (mirrors the planners' usage)
+# ---------------------------------------------------------------------------
+
+def _instance(seed: int):
+    """Random (params, region, caps) across MSR/interior/MBR with degenerate
+    capacity patterns: exact ties, zero links, single helper."""
+    rng = random.Random(seed)
+    k = rng.choice([1, 2, 3, 4, 5])
+    d = rng.randint(k, k + 9)
+    if rng.random() < 0.05:
+        k = d = 1                       # single-helper code
+    M = float(rng.choice([120, 600, 8000]))
+    a_msr = M / k
+    try:
+        a_mbr, _ = mbr_point(M, k, d)
+    except ZeroDivisionError:
+        a_mbr = a_msr
+    alpha = rng.choice([a_msr, a_mbr, 0.5 * (a_msr + a_mbr)])
+    params = CodeParams(n=d + 2, k=k, d=d, M=M, alpha=alpha)
+    region = msr_region(params) if params.is_msr else heuristic_region(params)
+    caps = [rng.uniform(0.3, 120.0) for _ in range(d)]
+    r = rng.random()
+    if r < 0.15:
+        caps = [rng.choice([20.0, 50.0]) for _ in range(d)]  # exact ties
+    elif r < 0.25:
+        caps[rng.randrange(d)] = 0.0                         # dead link
+    return params, region, caps
+
+
+def _random_tree(rng: random.Random, d: int):
+    parent = {}
+    order = list(range(1, d + 1))
+    rng.shuffle(order)
+    placed = [0]
+    for u in order:
+        parent[u] = rng.choice(placed)
+        placed.append(u)
+    return parent
+
+
+def _check_star(seed: int) -> None:
+    params, region, caps = _instance(seed)
+    alpha = params.alpha
+    t = lp.minmax_time_star(caps, region, alpha)
+    if not math.isfinite(t):
+        return
+    exact = np.array(lp.min_traffic_at_time(t, caps, region, alpha))
+    sol = np.array(lp.min_traffic_at_time(t, caps, region, alpha,
+                                          witness="lp"))
+    # per-edge equivalence at the planner's query time: the optimal face
+    # collapses at the bisection optimum, and the level-cut point is
+    # exactly HiGHS's vertex there
+    np.testing.assert_allclose(exact, sol, rtol=1e-9, atol=1e-9)
+    # witness validity and structure
+    ub = np.minimum(t * np.asarray(caps), alpha)
+    assert region.contains(exact.tolist(), tol=1e-7)
+    assert (exact <= ub + 1e-12).all() and (exact >= -1e-12).all()
+    np.testing.assert_allclose(exact, np.minimum(ub, exact.max()),
+                               rtol=0, atol=1e-12)
+    # at strictly-interior times the face may be degenerate (k=1: only the
+    # total binds) — there the contract is objective equality
+    for mult in (1.3, 2.5):
+        e2 = np.array(lp.min_traffic_at_time(mult * t, caps, region, alpha))
+        s2 = np.array(lp.min_traffic_at_time(mult * t, caps, region, alpha,
+                                             witness="lp"))
+        assert e2.sum() == pytest.approx(s2.sum(), rel=1e-9, abs=1e-9)
+        assert region.contains(e2.tolist(), tol=1e-7)
+
+
+def _check_tree(seed: int) -> None:
+    params, region, caps_direct = _instance(seed)
+    d, alpha = params.d, params.alpha
+    rng = random.Random(seed + 77)
+    parent = _random_tree(rng, d)
+    cap_of_edge = {(u, p): (caps_direct[u - 1] if rng.random() < 0.5
+                            else rng.uniform(0.3, 120.0))
+                   for u, p in parent.items()}
+    t, _ = lp.tree_optimal_time(parent, cap_of_edge, region, alpha, iters=50)
+    if not math.isfinite(t):
+        return
+    exact = lp.tree_feasible_at_time(t, parent, cap_of_edge, region, alpha,
+                                     minimize_traffic=True)
+    sol = lp.tree_feasible_at_time(t, parent, cap_of_edge, region, alpha,
+                                   minimize_traffic=True, witness="lp")
+    wf = lp.tree_feasible_at_time(t, parent, cap_of_edge, region, alpha)
+    assert exact is not None and wf is not None
+    exact = np.array(exact)
+    # LP-optimality of the exact witness: equal objective (generated
+    # traffic), equal repair time, and feasibility — HiGHS may sit on a
+    # different vertex of the same optimal face, so per-edge equality
+    # against the solver is only guaranteed where the face is a point
+    if sol is not None:
+        assert exact.sum() == pytest.approx(np.sum(sol), rel=1e-9, abs=1e-7)
+        t_ex = _tree_time(parent, exact, cap_of_edge, alpha)
+        t_lp = _tree_time(parent, np.array(sol), cap_of_edge, alpha)
+        assert t_ex == pytest.approx(t_lp, rel=1e-9, abs=1e-9)
+    assert region.contains(exact.tolist(), tol=1e-7)
+    # the level cut respects every laminar subtree cap (it is <= wf)
+    assert (exact <= np.array(wf) + 1e-12).all()
+    np.testing.assert_allclose(exact, np.minimum(wf, exact.max()),
+                               rtol=0, atol=1e-12)
+
+
+def _tree_time(parent, betas, cap_of_edge, alpha) -> float:
+    from repro.core import tree_flows
+
+    flows = tree_flows(parent, betas.tolist(), alpha)
+    return max((f / cap_of_edge[e] if cap_of_edge[e] > 0 else math.inf)
+               for e, f in flows.items())
+
+
+# ---------------------------------------------------------------------------
+# Seeded deterministic sweep (runs everywhere, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+@needs_scipy
+@pytest.mark.parametrize("seed", range(0, 40))
+def test_star_witness_matches_lp_seeded(seed):
+    _check_star(seed)
+
+
+@needs_scipy
+@pytest.mark.parametrize("seed", range(0, 40))
+def test_tree_witness_matches_lp_seeded(seed):
+    _check_tree(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_scipy
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_star_witness_matches_lp_property(seed):
+        """Property form of the star equivalence (wider random family)."""
+        _check_star(seed)
+
+    @needs_scipy
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_tree_witness_matches_lp_property(seed):
+        """Property form of the tree equivalence (wider random family)."""
+        _check_tree(seed)
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points: bitwise determinism and scalar agreement
+# ---------------------------------------------------------------------------
+
+def test_min_traffic_batch_matches_scalar_bitwise():
+    """The batched star witness equals the scalar wrapper lane by lane
+    (same arithmetic), and is invariant to batch composition."""
+    rng = random.Random(3)
+    params, region, _ = _instance(123)
+    d, alpha = params.d, params.alpha
+    B = 17
+    direct = np.array([[rng.uniform(0.3, 120.0) for _ in range(d)]
+                       for _ in range(B)])
+    t = np.empty(B)
+    for b in range(B):
+        t[b] = lp.minmax_time_star(direct[b].tolist(), region, alpha)
+    got = wit.min_traffic_batch(t, direct, region, alpha)
+    for b in range(B):
+        want = wit.min_traffic(float(t[b]), direct[b].tolist(), region, alpha)
+        np.testing.assert_array_equal(got[b], want)
+    perm = rng.sample(range(B), B)
+    np.testing.assert_array_equal(
+        wit.min_traffic_batch(t[perm], direct[perm], region, alpha),
+        got[perm])
+
+
+def test_min_traffic_batch_poisons_dead_lanes():
+    """Non-finite times (infeasible star problems) produce zero betas, the
+    plan_fr_batch convention for lanes it later poisons to inf."""
+    region = FeasibleRegion(k=2, d=3, x=(10.0, 20.0))
+    t = np.array([math.inf, 1.0])
+    direct = np.array([[0.0, 0.0, 0.0], [30.0, 30.0, 30.0]])
+    out = wit.min_traffic_batch(t, direct, region, alpha=15.0)
+    assert (out[0] == 0.0).all()
+    assert region.contains_batch(out[1:2])[0]
+
+
+def test_level_cut_rejects_infeasible_max_point():
+    """An infeasible ub on a live lane raises (the old scipy-absent greedy's
+    contract) instead of returning a silently invalid witness; dead lanes
+    are exempt."""
+    region = FeasibleRegion(k=2, d=3, x=(4.0, 200.0))
+    ub_bad = np.array([[1.0, 1.0, 100.0]])    # sigma_1(ub) = 2 < 4 and
+    with pytest.raises(ValueError, match="coordinate-wise max point"):
+        wit.level_cut_batch(ub_bad, region)   # sigma_2(ub) = 102 < 200
+    lanes = np.array([False])
+    out = wit.level_cut_batch(ub_bad, region, lanes=lanes)  # masked: no raise
+    assert out.shape == (1, 3)
+
+
+def test_planners_reject_unknown_witness_eagerly():
+    """plan_fr (even on the MSR closed-form path, which never consults the
+    engine) and plan_ftr validate the witness string before doing work."""
+    from repro.core import OverlayNetwork, plan_fr, plan_ftr
+
+    params = CodeParams.msr(n=12, k=3, d=4, M=120.0)
+    cap = [[0.0 if u == v else 50.0 for v in range(5)] for u in range(5)]
+    net = OverlayNetwork(cap)
+    with pytest.raises(ValueError, match="unknown witness"):
+        plan_fr(net, params, witness="LP")
+    with pytest.raises(ValueError, match="unknown witness"):
+        plan_ftr(net, params, witness="bogus")
+
+
+def test_tree_traffic_batch_matches_scalar_path():
+    """tree_traffic_batch reproduces the scalar exact tree witness on
+    random trees (same water-fill + level cut, batched)."""
+    rng = random.Random(9)
+    params, region, _ = _instance(456)
+    d, alpha = params.d, params.alpha
+    B = 11
+    parents_l, caps_l, ts, want = [], [], [], []
+    while len(parents_l) < B:
+        parent = _random_tree(rng, d)
+        cap_of_edge = {(u, p): rng.uniform(1.0, 120.0)
+                       for u, p in parent.items()}
+        t, _ = lp.tree_optimal_time(parent, cap_of_edge, region, alpha,
+                                    iters=50)
+        if not math.isfinite(t):
+            continue
+        w = lp.tree_feasible_at_time(t, parent, cap_of_edge, region, alpha,
+                                     minimize_traffic=True)
+        assert w is not None
+        cap = np.zeros((d + 1, d + 1))
+        par = np.zeros(d + 1, dtype=np.int64)
+        for (u, p), c in cap_of_edge.items():
+            cap[u, p] = c
+            par[u] = p
+        parents_l.append(par)
+        caps_l.append(cap)
+        ts.append(t)
+        want.append(w)
+    got = wit.tree_traffic_batch(np.array(ts), np.array(parents_l),
+                                 np.array(caps_l), region, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Planner integration: witness="lp" escape hatch
+# ---------------------------------------------------------------------------
+
+@needs_scipy
+def test_planners_lp_escape_hatch_agrees_on_time_and_generated_traffic():
+    """plan_fr / plan_ftr with witness="lp" produce the same repair time and
+    generated traffic sum(beta) as the default exact oracle; for the star
+    planner the betas agree per edge."""
+    from repro.core import OverlayNetwork, plan_fr, plan_ftr
+
+    rng = random.Random(21)
+    for point in range(3):
+        M, k, d = 600.0, 3, 6
+        a_msr = M / k
+        a_mbr, _ = mbr_point(M, k, d)
+        alpha = [a_msr, 0.5 * (a_msr + a_mbr), a_mbr][point]
+        params = CodeParams(n=12, k=k, d=d, M=M, alpha=alpha)
+        for _ in range(4):
+            cap = [[0.0] * (d + 1) for _ in range(d + 1)]
+            for u in range(d + 1):
+                for v in range(d + 1):
+                    if u != v:
+                        cap[u][v] = rng.uniform(10.0, 120.0)
+            net = OverlayNetwork(cap)
+            fr_e, fr_l = plan_fr(net, params), plan_fr(net, params,
+                                                       witness="lp")
+            assert fr_e.time == pytest.approx(fr_l.time, rel=1e-9)
+            np.testing.assert_allclose(fr_e.betas, fr_l.betas,
+                                       rtol=1e-7, atol=1e-7)
+            ftr_e, ftr_l = plan_ftr(net, params), plan_ftr(net, params,
+                                                           witness="lp")
+            assert ftr_e.time == pytest.approx(ftr_l.time, rel=1e-9)
+            assert ftr_e.parent == ftr_l.parent
+            assert sum(ftr_e.betas) == pytest.approx(sum(ftr_l.betas),
+                                                     rel=1e-9, abs=1e-7)
+
+
+def test_compare_schemes_witness_engines_agree():
+    """compare_schemes(witness='lp') reproduces the default exact oracle's
+    mean times (the plans are the same trees/stars at the same times)."""
+    if not HAVE_SCIPY:
+        pytest.skip("scipy unavailable")
+    from repro.storage import compare_schemes, uniform
+
+    params = CodeParams.msr(n=12, k=3, d=5, M=300.0)
+    a = compare_schemes(params, uniform(), ("fr", "ftr"), trials=6, seed=4)
+    b = compare_schemes(params, uniform(), ("fr", "ftr"), trials=6, seed=4,
+                        witness="lp")
+    for s in ("fr", "ftr"):
+        assert a[s].mean_time == pytest.approx(b[s].mean_time, rel=1e-9)
+        assert a[s].mean_norm_time == pytest.approx(b[s].mean_norm_time,
+                                                    rel=1e-9)
