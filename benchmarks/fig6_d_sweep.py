@@ -7,13 +7,15 @@ d and vice versa at small d; tree schemes consume more total bandwidth.
 """
 from __future__ import annotations
 
-from repro.core import CodeParams
+from repro.core import CodeParams, scheme_names
 from repro.storage import compare_schemes, uniform
 
 from .common import quick_mode, row, save_artifact, timed_best_of
 
 N, K, M_BLOCKS = 20, 5, 8000.0  # 1 GB in 1-Mb blocks
-SCHEMES = ("star", "fr", "tr", "ftr")
+# registry-driven: every scheme with a batched planner (star/fr/tr/ftr +
+# the shah baseline; rctree stays out, as in the paper's Fig. 6)
+SCHEMES = scheme_names(batched=True)
 
 
 def run():

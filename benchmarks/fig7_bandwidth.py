@@ -5,13 +5,13 @@ Paper claims: ~90% reduction for U1[0.3,120]; at tight distributions
 """
 from __future__ import annotations
 
-from repro.core import CodeParams
+from repro.core import CodeParams, scheme_names
 from repro.storage import FIG7_DISTRIBUTIONS, compare_schemes
 
 from .common import quick_mode, row, save_artifact, timed_best_of
 
 N, K, D, M_BLOCKS = 20, 5, 10, 8000.0
-SCHEMES = ("star", "fr", "tr", "ftr")
+SCHEMES = scheme_names(batched=True)   # registry-driven scheme column
 
 
 def run():

@@ -6,13 +6,13 @@ alpha; tree schemes still pay extra total bandwidth.
 """
 from __future__ import annotations
 
-from repro.core import CodeParams, mbr_point
+from repro.core import CodeParams, mbr_point, scheme_names
 from repro.storage import compare_schemes, uniform
 
 from .common import quick_mode, row, save_artifact, timed_best_of
 
 N, K, D, M_BLOCKS = 20, 5, 10, 8000.0
-SCHEMES = ("star", "fr", "tr", "ftr")
+SCHEMES = scheme_names(batched=True)   # registry-driven scheme column
 
 
 def run():

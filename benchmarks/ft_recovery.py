@@ -5,7 +5,8 @@ traffic and stragglers: predicted regeneration time per scheme, speedup vs
 uniform STAR, and planning latency — the deployment-shaped version of the
 paper's Fig. 6/7 evaluation (DESIGN.md §3).
 
-Planning runs on the batched engine (``repro.core.batched``): all trial
+Planning dispatches through the unified planner API (``repro.core.plan`` /
+``plan_many``) over every batched-capable scheme in the registry: all trial
 overlays are sampled first, then each scheme plans the whole batch in one
 call.  ``run(engine="scalar")`` keeps the original per-overlay loop as the
 correctness oracle; the sampled overlay sequence is identical in both
@@ -18,13 +19,15 @@ import time
 
 import numpy as np
 
-from repro.core import (BATCHED_SCHEMES, CodeParams, caps_tensor,
-                        plan_fr, plan_ftr, plan_star, plan_tr)
+from repro.core import (CodeParams, caps_tensor, plan, plan_many,
+                        scheme_names)
 from repro.ft import Fleet, FleetConfig, choose_providers
 
 from .common import quick_mode, row, save_artifact
 
-SCHEMES = {"star": plan_star, "fr": plan_fr, "tr": plan_tr, "ftr": plan_ftr}
+# every batched-capable scheme in the registry (star/fr/tr/ftr/shah today;
+# the next registered scheme joins the table with no edit here)
+SCHEMES = scheme_names(batched=True)
 
 
 def run(engine: str = "batched"):
@@ -53,16 +56,16 @@ def run(engine: str = "batched"):
             caps = caps_tensor(overlays)
             for name in SCHEMES:
                 t0 = time.perf_counter()
-                res = BATCHED_SCHEMES[name](caps, params)
+                res = plan_many(caps, params, name, engine="batched")
                 plan_ms[name] = (time.perf_counter() - t0) * 1e3
                 acc[name] = float(np.sum(res.times))
         else:
             for overlay in overlays:
-                for name, planner in SCHEMES.items():
+                for name in SCHEMES:
                     t0 = time.perf_counter()
-                    plan = planner(overlay, params)
+                    p = plan(overlay, params, name, engine="scalar")
                     plan_ms[name] += (time.perf_counter() - t0) * 1e3
-                    acc[name] += plan.time
+                    acc[name] += p.time
         results[tag] = {s: acc[s] / trials for s in SCHEMES}
         results[tag + "_plan_ms"] = {s: plan_ms[s] / trials for s in SCHEMES}
     save_artifact("ft_recovery", results)

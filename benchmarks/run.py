@@ -107,10 +107,21 @@ def _plan_values(ran_modules) -> dict:
     return out
 
 
+def _registry_info() -> dict:
+    """The scheme family as the registry declares it — recorded in the
+    summary so a BENCH_planning.json is self-describing about which schemes
+    the (registry-enumerated, not hardcoded) fig drivers swept."""
+    from repro.core import scheme_names
+
+    return {"schemes": list(scheme_names()),
+            "batched": list(scheme_names(batched=True))}
+
+
 def _write_planning_summary(rows_by_module: dict) -> None:
     summary = {
         "quick": os.environ.get("BENCH_QUICK", "0") == "1",
         "seed": int(os.environ.get("BENCH_SEED", "0")),
+        "registry": _registry_info(),
         "rows": {
             r["name"]: round(r["us_per_call"], 3)
             for mod in PLANNING_MODULES

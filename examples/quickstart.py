@@ -1,18 +1,23 @@
 """Quickstart: the paper's Fig. 1 worked example, end to end.
 
 Builds the 4-provider overlay (70/50/20/10 Mbps direct links, a 35 Mbps
-v4->v1 side link), plans a regeneration of the failed node with all four
-schemes, verifies the MDS property of each plan via the information-flow
-graph, and executes the FTR plan on real GF(2^8)-coded data.
+v4->v1 side link), plans a regeneration of the failed node with the four
+paper schemes (plus the MDS-breaking RCTREE baseline) through the unified
+planner API (``repro.core.plan``), verifies the MDS property of each plan
+via the information-flow graph, plans a small Monte-Carlo batch with
+``plan_many`` on the vectorized engine across the pinned batched family,
+and executes the FTR plan on real GF(2^8)-coded data.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import random
+
 import numpy as np
 
 from repro.coding import GF8, RLNC
 from repro.core import (CodeParams, InfoFlowGraph, OverlayNetwork,
-                        event_from_plan, plan_fr, plan_ftr, plan_rctree,
-                        plan_star, plan_tr)
+                        caps_tensor, event_from_plan, plan, plan_many,
+                        scheme_names)
 
 # --- Fig. 1 setup: n=5, k=2, d=4, M=480 Mb, alpha=240, beta=80 --------------
 P = CodeParams.msr(n=5, k=2, d=4, M=480.0)
@@ -23,26 +28,49 @@ print(f"(n={P.n}, k={P.k}) MDS code, d={P.d} providers, "
       f"M={P.M:.0f} Mb, alpha={P.alpha:.0f} Mb, beta={P.beta:.0f} Mb\n")
 
 print(f"{'scheme':8s} {'time (s)':>9s} {'traffic (Mb)':>13s}  tree")
-for planner in (plan_star, plan_fr, plan_tr, plan_ftr):
-    plan = planner(net, P)
-    plan.validate(net)
-    tree = " ".join(f"v{u}->v{p}" if p else f"v{u}->nc"
-                    for u, p in sorted(plan.parent.items()))
-    print(f"{plan.scheme:8s} {plan.time:9.3f} {plan.total_traffic:13.1f}  {tree}")
+for scheme in ("star", "fr", "tr", "ftr"):
+    p = plan(net, P, scheme)
+    p.validate(net)
+    tree = " ".join(f"v{u}->v{pa}" if pa else f"v{u}->nc"
+                    for u, pa in sorted(p.parent.items()))
+    print(f"{p.scheme:8s} {p.time:9.3f} {p.total_traffic:13.1f}  {tree}")
 
     # MDS check: fail node 5, repair, then every k-subset must reach M
     g = InfoFlowGraph(P, initial_nodes=[1, 2, 3, 4, 5])
-    g.fail_and_repair(5, event_from_plan(plan, 6, [1, 2, 3, 4]))
+    g.fail_and_repair(5, event_from_plan(p, 6, [1, 2, 3, 4]))
     worst, flow = g.worst_collector()
-    assert flow >= P.M - 1e-6, (plan.scheme, worst, flow)
+    assert flow >= P.M - 1e-6, (p.scheme, worst, flow)
 print("\nall four schemes preserve the MDS property (min-cut >= M)")
 
-bad = plan_rctree(net, P)
+bad = plan(net, P, "rctree")
 g = InfoFlowGraph(P, initial_nodes=[1, 2, 3, 4, 5])
 g.fail_and_repair(5, event_from_plan(bad, 6, [1, 2, 3, 4]))
 worst, flow = g.worst_collector()
 print(f"RCTREE [7] min-cut through {worst} = {flow:.0f} Mb < M={P.M:.0f} "
       f"-> MDS broken (Appendix A)\n")
+
+# --- Monte-Carlo batch through the vectorized engine ------------------------
+# plan_many plans a whole batch of sampled overlays in one call per scheme.
+# The family is PINNED here (not enumerated from the registry) so that a
+# scheme losing its batched planner fails loudly: the scalar-fallback
+# RuntimeWarning errors under CI's -W error::RuntimeWarning run, and the
+# engine assert catches it even without the warning filter.
+BATCHED_FAMILY = ("star", "fr", "tr", "ftr", "shah")
+assert set(BATCHED_FAMILY) <= set(scheme_names()), "registry lost a scheme"
+rng = random.Random(0)
+batch = [OverlayNetwork([[0.0 if u == v else rng.uniform(10.0, 120.0)
+                          for v in range(P.d + 1)] for u in range(P.d + 1)])
+         for _ in range(16)]
+caps = caps_tensor(batch)
+print("mean regeneration time over a 16-overlay Monte-Carlo batch "
+      "(engine='batched'):")
+for scheme in BATCHED_FAMILY:
+    res = plan_many(caps, P, scheme, engine="batched")
+    assert res.engine == "batched", \
+        f"{scheme} silently took the {res.engine} path"
+    print(f"  {scheme:6s} {res.times.mean():7.3f} s   "
+          f"[{res.engine} engine]")
+print()
 
 # --- execute the FTR plan on real coded blocks ------------------------------
 print("executing the FTR plan on real GF(2^8)-coded blocks...")
@@ -53,23 +81,25 @@ alpha_b = M_blocks // P.k                   # 4 blocks/node
 file_blocks = GF8.random((M_blocks, blk), rng)
 nodes = dict(enumerate(rl.distribute(file_blocks, P.n, alpha_b, rng), 1))
 
-plan = plan_ftr(net, P)
+ftr_plan = plan(net, P, "ftr")
 scalefactor = alpha_b / P.alpha             # paper Mb -> demo blocks
 import math
 # produce bottom-up along the tree
 children = {}
-for u, p in plan.parent.items():
+for u, p in ftr_plan.parent.items():
     children.setdefault(p, []).append(u)
 
 def produce(u):
-    own = rl.encode(nodes[u], math.ceil(plan.betas[u - 1] * scalefactor - 1e-9), rng)
+    own = rl.encode(nodes[u],
+                    math.ceil(ftr_plan.betas[u - 1] * scalefactor - 1e-9), rng)
     recv = None
     for ch in children.get(u, []):
         part = produce(ch)
         recv = part if recv is None else recv.concat(part)
     if recv is None:
         return own
-    quota = math.ceil(plan.flows[(u, plan.parent[u])] * scalefactor - 1e-9)
+    quota = math.ceil(ftr_plan.flows[(u, ftr_plan.parent[u])] * scalefactor
+                      - 1e-9)
     return rl.relay(recv, own, quota, rng)
 
 received = None

@@ -13,6 +13,13 @@ Schemes (all return :class:`~repro.core.params.RepairPlan`):
 
 ``InfoFlowGraph`` verifies the MDS property of any repair history by
 max-flow (Lemma 1); ``FeasibleRegion`` encodes Theorem-1 regions.
+
+All schemes are entries in the capability-aware registry of
+:mod:`repro.core.api`; ``plan(net, params, scheme)`` and
+``plan_many(nets, params, scheme)`` are the unified entry points that own
+engine resolution (scalar vs batched) and kwarg forwarding.  The legacy
+``SCHEMES`` / ``BATCHED_SCHEMES`` dicts and ``plan_batch`` remain as
+registry-backed deprecation shims.
 """
 from .params import (CodeParams, OverlayNetwork, RepairPlan, Edge,
                      mbr_point, msr_point, plan_time, tree_flows, uniform_beta)
@@ -25,18 +32,9 @@ from .ort import iter_rooted_trees, plan_ort_flexible, plan_ort_uniform
 from .rctree import plan_rctree
 from .infoflow import InfoFlowGraph, RepairEvent, event_from_plan
 
-SCHEMES = {
-    "star": plan_star,
-    "fr": plan_fr,
-    "tr": plan_tr,
-    "ftr": plan_ftr,
-    "shah": plan_shah,
-    "rctree": plan_rctree,
-}
-
 __all__ = [
     "CodeParams", "OverlayNetwork", "RepairPlan", "Edge", "FeasibleRegion",
-    "InfoFlowGraph", "RepairEvent", "SCHEMES", "event_from_plan",
+    "InfoFlowGraph", "RepairEvent", "event_from_plan",
     "eval_tree", "fr_closed_form_msr", "heuristic_region", "iter_rooted_trees",
     "mbr_point", "msr_point", "msr_region", "plan_fr", "plan_ftr",
     "plan_ort_flexible", "plan_ort_uniform", "plan_rctree", "plan_shah",
@@ -50,14 +48,23 @@ from .extensions import (plan_multi_failures, store_and_forward_time,
 __all__ += ["plan_multi_failures", "store_and_forward_time",
             "streaming_time_with_latency"]
 
-from .batched import (BATCHED_SCHEMES, BatchPlanResult, caps_tensor,
-                      minmax_time_star_batch, plan_batch, plan_fr_batch,
-                      plan_ftr_batch, plan_star_batch, plan_tr_batch,
+from .batched import (BatchPlanResult, caps_tensor, minmax_time_star_batch,
+                      plan_batch, plan_fr_batch, plan_ftr_batch,
+                      plan_shah_batch, plan_star_batch, plan_tr_batch,
                       plans_from_batch, tree_optimal_time_batch)
-__all__ += ["BATCHED_SCHEMES", "BatchPlanResult", "caps_tensor",
-            "minmax_time_star_batch", "plan_batch", "plan_fr_batch",
-            "plan_ftr_batch", "plan_star_batch", "plan_tr_batch",
+__all__ += ["BatchPlanResult", "caps_tensor", "minmax_time_star_batch",
+            "plan_batch", "plan_fr_batch", "plan_ftr_batch",
+            "plan_shah_batch", "plan_star_batch", "plan_tr_batch",
             "plans_from_batch", "tree_optimal_time_batch"]
+
+# The unified planner API (scheme registry + plan()/plan_many dispatchers);
+# SCHEMES / BATCHED_SCHEMES live on as registry-backed deprecation shims.
+from .api import (BATCHED_SCHEMES, SCHEMES, SchemeSpec, get_scheme, plan,
+                  plan_many, register_scheme, scheme_names, schemes,
+                  unregister_scheme)
+__all__ += ["BATCHED_SCHEMES", "SCHEMES", "SchemeSpec", "get_scheme", "plan",
+            "plan_many", "register_scheme", "scheme_names", "schemes",
+            "unregister_scheme"]
 
 from .witness import (level_cut, level_cut_batch, min_traffic_batch,
                       tree_traffic_batch)

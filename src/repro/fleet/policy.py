@@ -3,12 +3,14 @@
 A policy receives the residual-capacity overlays of *every* repair starting
 at the current event epoch as one ``(R, d+1, d+1)`` tensor and returns one
 :class:`RepairPlan` per repair.  This batch-shaped interface is what lets
-the PR-1 batched planning engine serve as the decision core: a fixed policy
-plans all R repairs with one ``plan_batch`` call, and the flexible policy
-plans all R repairs under *every* candidate scheme (one batched call per
-scheme) and picks, per repair, the fastest plan under the residual
-capacities — the fleet-scale version of the paper's "choose the scheme
-that minimizes regeneration time" message.
+the batched planning engine serve as the decision core: a fixed policy
+plans all R repairs with one ``repro.core.plan_many`` call, and the
+flexible policy plans all R repairs under *every* candidate scheme (one
+batched call per scheme) and picks, per repair, the fastest plan under the
+residual capacities — the fleet-scale version of the paper's "choose the
+scheme that minimizes regeneration time" message.  Scheme names are
+validated against the scheme registry (``repro.core.api``), so a policy
+spec for a newly registered scheme works with no fleet-side change.
 
 The residual overlays are a *same-epoch snapshot*: repairs admitted at one
 event epoch are planned against the shares left by already-active work,
@@ -35,8 +37,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
-                        RepairPlan, SCHEMES, plan_batch, plans_from_batch)
+from repro.core import (CodeParams, RepairPlan, get_scheme, plan_many,
+                        plans_from_batch, scheme_names)
 
 
 class RepairPolicy:
@@ -71,26 +73,23 @@ class RepairPolicy:
 
 
 class FixedPolicy(RepairPolicy):
-    """Always the same scheme (star / fr / tr / ftr / shah / rctree).
+    """Always the same scheme (any name in the scheme registry).
 
-    Schemes with a batched planner go through :func:`plan_batch`; the rest
-    fall back to the scalar planner per overlay.
+    Planning goes through :func:`repro.core.plan_many` with
+    ``engine="auto"``: schemes registered with a batched planner run it,
+    schemes declared scalar-only (rctree) take the per-overlay scalar
+    planner — the registry owns that decision, not this class.
     """
 
     def __init__(self, scheme: str):
-        if scheme not in SCHEMES:
-            raise ValueError(f"unknown scheme {scheme!r}; "
-                             f"available: {sorted(SCHEMES)}")
+        self.spec = get_scheme(scheme)   # raises listing registered schemes
         self.scheme = scheme
         self.name = scheme
 
     def plan_batch(self, caps: np.ndarray, params: CodeParams,
                    ) -> List[RepairPlan]:
-        if self.scheme in BATCHED_SCHEMES:
-            return plans_from_batch(plan_batch(caps, params, self.scheme),
-                                    params)
-        return [SCHEMES[self.scheme](OverlayNetwork(c.tolist()), params)
-                for c in caps]
+        return plans_from_batch(
+            plan_many(caps, params, self.scheme, engine="auto"), params)
 
 
 class FlexiblePolicy(RepairPolicy):
@@ -103,15 +102,18 @@ class FlexiblePolicy(RepairPolicy):
     name = "flexible"
 
     def __init__(self, schemes: Sequence[str] = ("ftr", "tr", "fr", "star")):
-        unknown = [s for s in schemes if s not in BATCHED_SCHEMES]
-        if unknown:
-            raise ValueError(f"flexible policy needs batched planners; "
-                             f"none for {unknown}")
+        specs = [get_scheme(s) for s in schemes]  # raises listing registered
+        scalar_only = [sp.name for sp in specs if sp.batched is None]
+        if scalar_only:
+            raise ValueError(
+                f"flexible policy needs batched planners; none registered "
+                f"for {scalar_only} (batched schemes: "
+                f"{sorted(scheme_names(batched=True))})")
         self.schemes: Tuple[str, ...] = tuple(schemes)
 
     def plan_batch(self, caps: np.ndarray, params: CodeParams,
                    ) -> List[RepairPlan]:
-        per_scheme = [plans_from_batch(plan_batch(caps, params, s), params)
+        per_scheme = [plans_from_batch(plan_many(caps, params, s), params)
                       for s in self.schemes]
         times = np.array([[p.time for p in plans] for plans in per_scheme])
         winner = np.argmin(times, axis=0)       # first minimum wins ties

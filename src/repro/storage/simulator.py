@@ -16,15 +16,13 @@ import dataclasses
 import itertools
 import math
 import random
-import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.coding import GF, GF8, RLNC, CodedBlocks
-from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
-                        RepairPlan, caps_tensor, plan_batch, plan_time,
-                        plans_from_batch, SCHEMES)
+from repro.core import (CodeParams, RepairPlan, caps_tensor, get_scheme,
+                        plan, plan_many, plans_from_batch)
 from .capacities import CapSampler
 
 
@@ -43,23 +41,6 @@ class SchemeStats:
     engine: str = "scalar"     # engine that actually planned this scheme
 
 
-_warned_scalar_fallback: set = set()
-
-
-def _warn_scalar_fallback(scheme: str) -> None:
-    """One warning per scheme per process — not one per trial — when a
-    scheme silently rides the scalar path inside a batched run."""
-    if scheme not in _warned_scalar_fallback:
-        _warned_scalar_fallback.add(scheme)
-        warnings.warn(
-            f"compare_schemes(engine='batched'): no batched planner for "
-            f"{scheme!r}; falling back to the scalar path for all trials "
-            f"(see SchemeStats.engine)", RuntimeWarning, stacklevel=3)
-
-
-_WITNESS_SCHEMES = ("fr", "ftr")   # schemes whose planners take ``witness``
-
-
 def compare_schemes(params: CodeParams, sampler: CapSampler,
                     schemes: Sequence[str], trials: int,
                     seed: int = 0, engine: str = "batched",
@@ -67,13 +48,17 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
                     ) -> Dict[str, SchemeStats]:
     """Monte-Carlo scheme comparison over ``trials`` sampled overlays.
 
-    ``engine="batched"`` (default) plans every trial at once with the
-    vectorized engine in :mod:`repro.core.batched`; schemes without a batched
-    planner (shah, rctree) transparently fall back to the scalar path.
+    All planning is dispatched through :func:`repro.core.plan_many` /
+    :func:`repro.core.plan`, so engine selection, per-scheme kwarg
+    forwarding (``witness`` reaches exactly the schemes that declared it)
+    and the scalar fallback for registry entries without a batched planner
+    (rctree) are owned by the scheme registry — the fallback warns once per
+    scheme per process and is surfaced in ``SchemeStats.engine``.
+    ``engine="batched"`` (default) plans every trial at once;
     ``engine="scalar"`` is the original per-network loop, kept as the
-    correctness oracle (see tests/test_batched.py).  ``witness`` selects the
-    traffic-minimal witness engine for fr/ftr: the exact level-cut oracle
-    (default) or the per-trial scipy LP (``witness="lp"``).
+    correctness oracle (see tests/test_batched.py).  ``witness`` selects
+    the traffic-minimal witness engine for fr/ftr: the exact level-cut
+    oracle (default) or the per-trial scipy LP (``witness="lp"``).
     """
     import time as _time
 
@@ -82,45 +67,35 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
     rng = random.Random(seed)
     nets = [sampler(rng, params.d) for _ in range(trials)]
 
-    def _kw(s):
-        return {"witness": witness} if s in _WITNESS_SCHEMES else {}
-
     if engine == "batched":
         caps = caps_tensor(nets)
-        base = BATCHED_SCHEMES["star"](caps, params)
+        base = plan_many(caps, params, "star", engine="batched")
         out: Dict[str, SchemeStats] = {}
         for s in schemes:
             t0 = _time.perf_counter()
-            if s in BATCHED_SCHEMES:
-                used = "batched"
-                res = BATCHED_SCHEMES[s](caps, params, **_kw(s))
-                times, traffic = res.times, res.traffic
-            else:  # scalar fallback for schemes not vectorized yet
-                used = "scalar"
-                _warn_scalar_fallback(s)
-                plans = [SCHEMES[s](net, params) for net in nets]
-                times = np.array([p.time for p in plans])
-                traffic = np.array([p.total_traffic for p in plans])
+            res = plan_many(caps, params, s, engine="batched",
+                            witness=witness)
             dt = _time.perf_counter() - t0
             out[s] = SchemeStats(
-                s, float(times.mean()), float((times / base.times).mean()),
-                float(traffic.mean()),
-                float((traffic / base.traffic).mean()), dt / trials,
-                engine=used)
+                s, float(res.times.mean()),
+                float((res.times / base.times).mean()),
+                float(res.traffic.mean()),
+                float((res.traffic / base.traffic).mean()), dt / trials,
+                engine=res.engine)
         return out
 
     acc = {s: [0.0, 0.0, 0.0, 0.0, 0.0] for s in schemes}
     for net in nets:
-        base = SCHEMES["star"](net, params)
+        base = plan(net, params, "star", engine="scalar")
         for s in schemes:
             t0 = _time.perf_counter()
-            plan = SCHEMES[s](net, params, **_kw(s))
+            p = plan(net, params, s, engine="scalar", witness=witness)
             dt = _time.perf_counter() - t0
             a = acc[s]
-            a[0] += plan.time
-            a[1] += plan.time / base.time
-            a[2] += plan.total_traffic
-            a[3] += plan.total_traffic / base.total_traffic
+            a[0] += p.time
+            a[1] += p.time / base.time
+            a[2] += p.total_traffic
+            a[3] += p.total_traffic / base.total_traffic
             a[4] += dt
     return {
         s: SchemeStats(s, a[0] / trials, a[1] / trials, a[2] / trials,
@@ -230,25 +205,22 @@ class RlncSimulator:
         for ``execute_plan``.
         """
         drawn = [self._sample_round(sampler) for _ in range(rounds)]
-        if self.engine == "batched" and scheme in BATCHED_SCHEMES:
-            res = plan_batch(caps_tensor([net for _, _, net in drawn]),
-                             self.params, scheme)
-            plans = plans_from_batch(res, self.params)
-        else:   # scalar oracle, and schemes without a batched planner
-            plans = [SCHEMES[scheme](net, self.params)
-                     for _, _, net in drawn]
-        return [(f, p, plan) for (f, p, _), plan in zip(drawn, plans)]
+        # engine="auto" rides the batched planner when the registry has one
+        # and silently takes the scalar oracle otherwise (rctree)
+        eng = "auto" if self.engine == "batched" else "scalar"
+        res = plan_many([net for _, _, net in drawn], self.params, scheme,
+                        engine=eng)
+        plans = plans_from_batch(res, self.params)
+        return [(f, p, pl) for (f, p, _), pl in zip(drawn, plans)]
 
     def repair_round(self, scheme: str, sampler: CapSampler,
                      failed: Optional[int] = None) -> RepairPlan:
         failed, providers, net = self._sample_round(sampler, failed)
-        if self.engine == "batched" and scheme in BATCHED_SCHEMES:
-            res = plan_batch(caps_tensor([net]), self.params, scheme)
-            plan = plans_from_batch(res, self.params)[0]
-        else:   # scalar oracle, and schemes without a batched planner
-            plan = SCHEMES[scheme](net, self.params)
-        self.execute_plan(plan, failed, providers)
-        return plan
+        eng = "auto" if self.engine == "batched" else "scalar"
+        pl = plans_from_batch(plan_many([net], self.params, scheme,
+                                        engine=eng), self.params)[0]
+        self.execute_plan(pl, failed, providers)
+        return pl
 
     def reconstruction_probability(self, samples: int = 0) -> float:
         """Fraction of k-subsets (all, or ``samples`` random ones) whose
@@ -290,7 +262,7 @@ def reconstruction_vs_rounds(params: CodeParams, scheme: str,
                             engine=engine)
         probs[0] += sim.reconstruction_probability(subset_samples)
         if (engine == "batched" and subset_samples == 0
-                and scheme in BATCHED_SCHEMES):
+                and get_scheme(scheme).batched is not None):
             planned = sim.plan_rounds(scheme, sampler, rounds)
             for r, (failed, providers, plan) in enumerate(planned, start=1):
                 sim.execute_plan(plan, failed, providers)

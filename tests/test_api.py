@@ -1,0 +1,315 @@
+"""Unified planner API (repro.core.api): registry round-trip, engine
+resolution, plan()/plan_many() equivalence with the scalar oracle for every
+registered scheme, kwarg forwarding, and the deprecation shims that keep
+the legacy SCHEMES / BATCHED_SCHEMES / plan_batch imports alive.
+"""
+import math
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (CodeParams, OverlayNetwork, RepairPlan, caps_tensor,
+                        get_scheme, plan, plan_many, plans_from_batch,
+                        register_scheme, scheme_names, unregister_scheme)
+from repro.core import api
+
+
+def _nets(seed: int, count: int, d: int, lo=10.0, hi=120.0):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(count):
+        cap = [[0.0] * (d + 1) for _ in range(d + 1)]
+        for u in range(d + 1):
+            for v in range(d + 1):
+                if u != v:
+                    cap[u][v] = rng.uniform(lo, hi)
+        out.append(OverlayNetwork(cap))
+    return out
+
+
+def _param_points():
+    M, k, d, n = 600.0, 3, 6, 12
+    return [
+        ("msr", CodeParams.msr(n=n, k=k, d=d, M=M)),
+        ("interior", CodeParams(n=n, k=k, d=d, M=M, alpha=230.0)),
+    ]
+
+
+PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+
+
+# ---------------------------------------------------------------------------
+# plan() / plan_many() vs the scalar oracle, for every registered scheme
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point,params", _param_points())
+@pytest.mark.parametrize("scheme", scheme_names())
+def test_plan_many_matches_scalar_oracle(scheme, point, params):
+    """plan_many (engine='auto') must agree with the per-network scalar
+    planner on time AND traffic for every scheme in the registry, report
+    the engine the registry declares, and never warn on the auto path."""
+    nets = _nets(seed=len(scheme) + ord(point[0]), count=10, d=params.d)
+    spec = get_scheme(scheme)
+    scalar = [spec.scalar(net, params) for net in nets]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)  # auto never warns
+        res = plan_many(caps_tensor(nets), params, scheme)
+    np.testing.assert_allclose(res.times, [p.time for p in scalar],
+                               rtol=1e-9, atol=1e-6,
+                               err_msg=f"{scheme}@{point}: time mismatch")
+    np.testing.assert_allclose(res.traffic, [p.total_traffic for p in scalar],
+                               rtol=1e-9, atol=1e-6,
+                               err_msg=f"{scheme}@{point}: traffic mismatch")
+    assert res.engine == ("batched" if spec.batched is not None else "scalar")
+    # and plan() with the default engine IS the scalar oracle
+    p0 = plan(nets[0], params, scheme)
+    assert p0.time == scalar[0].time
+    assert p0.total_traffic == scalar[0].total_traffic
+
+
+@pytest.mark.parametrize("scheme", scheme_names(batched=True))
+def test_plan_single_network_through_batched_engine(scheme):
+    """plan(engine='batched') routes a B=1 batch through the vectorized
+    planner and materializes the same plan the batch reports."""
+    net = _nets(seed=31, count=1, d=PARAMS.d)[0]
+    pb = plan(net, PARAMS, scheme, engine="batched")
+    ps = plan(net, PARAMS, scheme, engine="scalar")
+    assert pb.time == pytest.approx(ps.time, rel=1e-9, abs=1e-6)
+    assert pb.total_traffic == pytest.approx(ps.total_traffic,
+                                             rel=1e-9, abs=1e-6)
+    pb.validate(net)
+
+
+def test_plan_shah_batch_is_bitwise_scalar():
+    """The vectorized shah planner mirrors the scalar one's sequential
+    float arithmetic exactly — equality, not allclose."""
+    for point, params in _param_points():
+        nets = _nets(seed=17, count=25, d=params.d)
+        res = plan_many(caps_tensor(nets), params, "shah", engine="batched")
+        for i, net in enumerate(nets):
+            sp = plan(net, params, "shah", engine="scalar")
+            assert res.times[i] == sp.time, (point, i)
+            assert res.betas[i].tolist() == sp.betas, (point, i)
+    # infeasible overlay: scalar contract is inf time, zero traffic
+    zero = OverlayNetwork.star_only([0.0] * PARAMS.d)
+    r = plan_many(caps_tensor([zero]), PARAMS, "shah", engine="batched")
+    s = plan(zero, PARAMS, "shah", engine="scalar")
+    assert math.isinf(r.times[0]) and math.isinf(s.time)
+    assert r.traffic[0] == 0.0 == s.total_traffic
+
+
+def test_plan_forwards_scheme_specific_kwargs():
+    """Extra kwargs (shah's beta_max) pass through both entry points."""
+    net = _nets(seed=5, count=1, d=PARAMS.d)[0]
+    bmax = 0.6 * PARAMS.alpha
+    direct = plan(net, PARAMS, "shah", beta_max=bmax)
+    batched = plan_many(caps_tensor([net]), PARAMS, "shah",
+                        engine="batched", beta_max=bmax)
+    assert batched.times[0] == direct.time
+    assert direct.time != plan(net, PARAMS, "shah").time  # kwarg had effect
+
+
+def test_witness_kwarg_reaches_only_declaring_schemes():
+    """witness= is forwarded to exactly the schemes that declared
+    accepts_witness (they validate it eagerly) and dropped for the rest."""
+    net = _nets(seed=3, count=1, d=PARAMS.d)[0]
+    caps = caps_tensor([net])
+    for scheme in ("fr", "ftr"):
+        assert get_scheme(scheme).accepts_witness
+        with pytest.raises(ValueError, match="unknown witness engine"):
+            plan(net, PARAMS, scheme, witness="bogus")
+        with pytest.raises(ValueError, match="unknown witness engine"):
+            plan_many(caps, PARAMS, scheme, witness="bogus")
+    for scheme in ("star", "tr", "shah", "rctree"):
+        assert not get_scheme(scheme).accepts_witness
+        plan(net, PARAMS, scheme, witness="bogus")          # silently dropped
+        plan_many(caps, PARAMS, scheme, witness="bogus")
+
+
+def test_unknown_scheme_and_engine_errors():
+    net = _nets(seed=1, count=1, d=PARAMS.d)[0]
+    with pytest.raises(ValueError, match="registered schemes"):
+        plan(net, PARAMS, "bogus")
+    with pytest.raises(ValueError, match="registered schemes"):
+        plan_many(caps_tensor([net]), PARAMS, "bogus")
+    with pytest.raises(ValueError, match="unknown engine"):
+        plan(net, PARAMS, "star", engine="warp")
+    with pytest.raises(ValueError, match="unknown engine"):
+        plan_many(caps_tensor([net]), PARAMS, "star", engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip and the declared scalar fallback
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip():
+    """register (as a decorator) -> list -> capability flags -> dispatch
+    -> unregister."""
+    from repro.core import SCHEMES, BATCHED_SCHEMES
+
+    @register_scheme("_test_dummy", topology="star",
+                     description="test-only delegate to star")
+    def plan_dummy(net, params, **kw):
+        return plan(net, params, "star")
+
+    try:
+        assert "_test_dummy" in scheme_names()
+        assert "_test_dummy" in scheme_names(batched=False)
+        assert "_test_dummy" not in scheme_names(batched=True)
+        assert "_test_dummy" in scheme_names(topology="star")
+        spec = get_scheme("_test_dummy")
+        assert spec.scalar is plan_dummy
+        assert spec.batched is None
+        assert not spec.accepts_witness and not spec.produces_tree
+
+        nets = _nets(seed=8, count=4, d=PARAMS.d)
+        p = plan(nets[0], PARAMS, "_test_dummy")
+        assert isinstance(p, RepairPlan)
+        res = plan_many(caps_tensor(nets), PARAMS, "_test_dummy")
+        assert res.engine == "scalar"
+        assert len(res.plans) == len(nets)
+        assert plans_from_batch(res, PARAMS) == res.plans
+
+        # the legacy dict views are live: the new scheme shows up at once
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert SCHEMES["_test_dummy"] is plan_dummy
+            assert "_test_dummy" not in BATCHED_SCHEMES
+
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheme("_test_dummy", plan_dummy)
+    finally:
+        unregister_scheme("_test_dummy")
+    assert "_test_dummy" not in scheme_names()
+    with pytest.raises(ValueError, match="registered schemes"):
+        get_scheme("_test_dummy")
+
+
+def test_builtin_capability_flags():
+    """The paper's family is registered with the capabilities the planners
+    actually have."""
+    assert scheme_names() == ("star", "fr", "tr", "ftr", "shah", "rctree")
+    assert scheme_names(batched=True) == ("star", "fr", "tr", "ftr", "shah")
+    assert scheme_names(topology="tree") == ("tr", "ftr", "rctree")
+    assert get_scheme("rctree").batched is None     # declared, not discovered
+    assert {s for s in scheme_names() if get_scheme(s).accepts_witness} \
+        == {"fr", "ftr"}
+
+
+def test_explicit_batched_request_warns_once_then_falls_back():
+    """engine='batched' on a scalar-only scheme warns once per scheme per
+    process and plans on the scalar path; engine='auto' never warns."""
+    nets = _nets(seed=23, count=3, d=PARAMS.d)
+    caps = caps_tensor(nets)
+    api._warned_scalar_fallback.discard("rctree")
+    with pytest.warns(RuntimeWarning,
+                      match="no batched planner registered for 'rctree'"):
+        res = plan_many(caps, PARAMS, "rctree", engine="batched")
+    assert res.engine == "scalar"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)   # second call silent
+        again = plan_many(caps, PARAMS, "rctree", engine="batched")
+    assert again.engine == "scalar"
+
+
+def test_scalar_fallback_preserves_rctree_flows():
+    """rctree's fixed-beta-per-edge flows are NOT tree_flows(parents, betas);
+    the fallback batch must hand back the original scalar plans verbatim."""
+    nets = _nets(seed=29, count=3, d=PARAMS.d)
+    res = plan_many(caps_tensor(nets), PARAMS, "rctree")
+    plans = plans_from_batch(res, PARAMS)
+    for net, got in zip(nets, plans):
+        want = get_scheme("rctree").scalar(net, PARAMS)
+        assert got.parent == want.parent
+        assert got.flows == want.flows
+        assert got.time == want.time
+
+
+def test_compare_schemes_batched_covers_shah_without_fallback():
+    """Acceptance: compare_schemes over the star family incl. shah at
+    engine='batched' reports engine='batched' everywhere, with no
+    fallback warning, and agrees with the scalar oracle."""
+    from repro.storage import compare_schemes, uniform
+
+    family = ("star", "fr", "tr", "ftr", "shah")
+    params = CodeParams.msr(n=20, k=5, d=6, M=1000.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        stats = compare_schemes(params, uniform(), family, trials=6,
+                                seed=3, engine="batched")
+    assert [stats[s].engine for s in family] == ["batched"] * len(family)
+    scalar = compare_schemes(params, uniform(), family, trials=6,
+                             seed=3, engine="scalar")
+    for s in family:
+        assert stats[s].mean_time == pytest.approx(scalar[s].mean_time,
+                                                   rel=1e-9)
+        assert stats[s].mean_traffic == pytest.approx(
+            scalar[s].mean_traffic, rel=1e-9)
+        assert stats[s].mean_norm_time == pytest.approx(
+            scalar[s].mean_norm_time, rel=1e-9)
+
+
+def test_policy_specs_validate_against_registry():
+    """Fleet policy specs resolve through the registry, with errors that
+    list what is registered."""
+    from repro.fleet import FixedPolicy, FlexiblePolicy, make_policy
+
+    with pytest.raises(ValueError, match="registered schemes"):
+        FixedPolicy("bogus")
+    with pytest.raises(ValueError, match="registered schemes"):
+        make_policy("bogus")
+    with pytest.raises(ValueError, match="batched planners"):
+        FlexiblePolicy(("ftr", "rctree"))
+    assert make_policy("rctree").name == "rctree"   # scalar-only is fine
+    assert make_policy("flexible").name == "flexible"
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_legacy_scheme_maps_warn_once_and_stay_live():
+    from repro.core import BATCHED_SCHEMES, SCHEMES
+    from repro.core.batched import plan_shah_batch
+    from repro.core.star import plan_star
+
+    api._deprecation_warned.discard("SCHEMES")
+    with pytest.warns(DeprecationWarning, match="SCHEMES is deprecated"):
+        assert SCHEMES["star"] is plan_star
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # exactly once
+        assert "rctree" in SCHEMES
+        assert sorted(SCHEMES) == sorted(scheme_names())
+
+    api._deprecation_warned.discard("BATCHED_SCHEMES")
+    with pytest.warns(DeprecationWarning,
+                      match="BATCHED_SCHEMES is deprecated"):
+        assert BATCHED_SCHEMES["shah"] is plan_shah_batch
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert "rctree" not in BATCHED_SCHEMES
+        assert sorted(BATCHED_SCHEMES) == sorted(scheme_names(batched=True))
+
+
+def test_plan_batch_shim_forwards_kwargs_and_warns_once():
+    """Satellite fix: witness= (any per-scheme kwarg) now passes through
+    plan_batch, which used to swallow the signature entirely."""
+    from repro.core import plan_batch
+
+    nets = _nets(seed=41, count=4, d=PARAMS.d)
+    caps = caps_tensor(nets)
+    api._deprecation_warned.discard("plan_batch")
+    with pytest.warns(DeprecationWarning, match="plan_batch is deprecated"):
+        res = plan_batch(caps, PARAMS, "fr")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # exactly once
+        # kwargs are forwarded: fr validates the witness engine eagerly
+        with pytest.raises(ValueError, match="unknown witness engine"):
+            plan_batch(caps, PARAMS, "fr", witness="bogus")
+        res2 = plan_batch(caps, PARAMS, "fr", witness="exact")
+        # schemes declared scalar-only keep the historical ValueError
+        with pytest.raises(ValueError, match="no batched planner"):
+            plan_batch(caps, PARAMS, "rctree")
+    np.testing.assert_array_equal(res.times, res2.times)

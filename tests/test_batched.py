@@ -12,8 +12,8 @@ import random
 import numpy as np
 import pytest
 
-from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork, SCHEMES,
-                        caps_tensor, mbr_point, plan_tr)
+from repro.core import (CodeParams, OverlayNetwork, caps_tensor, get_scheme,
+                        mbr_point, plan_tr)
 from repro.core import batched as bt
 from repro.core.lp import waterfill_max
 
@@ -52,8 +52,8 @@ def test_batched_matches_scalar(point, params):
     nets = _nets(seed=hash(point) % 10_000, count=20, d=params.d)
     caps = caps_tensor(nets)
     for s in SCHEME_NAMES:
-        res = BATCHED_SCHEMES[s](caps, params)
-        scalar = [SCHEMES[s](net, params) for net in nets]
+        res = get_scheme(s).batched(caps, params)
+        scalar = [get_scheme(s).scalar(net, params) for net in nets]
         np.testing.assert_allclose(
             res.times, [p.time for p in scalar], rtol=1e-9, atol=1e-6,
             err_msg=f"{s}@{point}: time mismatch")
@@ -70,14 +70,14 @@ def test_batched_invariant_to_batch_order_and_size():
     caps = caps_tensor(nets)
     perm = np.array([5, 0, 11, 3, 8, 1, 10, 2, 7, 4, 9, 6])
     for s in ("tr", "ftr"):
-        full = BATCHED_SCHEMES[s](caps, params)
-        shuffled = BATCHED_SCHEMES[s](caps[perm], params)
+        full = get_scheme(s).batched(caps, params)
+        shuffled = get_scheme(s).batched(caps[perm], params)
         np.testing.assert_allclose(shuffled.times, full.times[perm],
                                    rtol=0, atol=1e-12)
         np.testing.assert_allclose(shuffled.traffic, full.traffic[perm],
                                    rtol=0, atol=1e-12)
-        lo_half = BATCHED_SCHEMES[s](caps[:5], params)   # uneven split
-        hi_half = BATCHED_SCHEMES[s](caps[5:], params)
+        lo_half = get_scheme(s).batched(caps[:5], params)   # uneven split
+        hi_half = get_scheme(s).batched(caps[5:], params)
         np.testing.assert_allclose(
             np.concatenate([lo_half.times, hi_half.times]), full.times,
             rtol=0, atol=1e-12)
@@ -130,26 +130,29 @@ def test_compare_schemes_engines_agree():
 
 
 def test_compare_schemes_fallback_warns_once_and_reports_engine():
-    """Schemes without a batched planner (shah, rctree) must announce the
-    scalar fallback exactly once per process and surface the engine that
-    actually planned them in SchemeStats.engine."""
+    """Schemes registered without a batched planner (rctree) must announce
+    the scalar fallback exactly once per process and surface the engine that
+    actually planned them in SchemeStats.engine.  Schemes WITH a batched
+    planner — including shah since its vectorization — must never warn."""
     import warnings
 
+    from repro.core import api
     from repro.storage import compare_schemes, uniform
-    from repro.storage import simulator as sim_mod
 
     params = CodeParams.msr(n=12, k=3, d=4, M=120.0)
-    sim_mod._warned_scalar_fallback.clear()
-    with pytest.warns(RuntimeWarning, match="no batched planner for 'shah'"):
-        stats = compare_schemes(params, uniform(), ("star", "shah"),
+    api._warned_scalar_fallback.clear()
+    with pytest.warns(RuntimeWarning,
+                      match="no batched planner registered for 'rctree'"):
+        stats = compare_schemes(params, uniform(), ("star", "rctree"),
                                 trials=3, seed=0, engine="batched")
     assert stats["star"].engine == "batched"
-    assert stats["shah"].engine == "scalar"
+    assert stats["rctree"].engine == "scalar"
     with warnings.catch_warnings():
         warnings.simplefilter("error", RuntimeWarning)  # would fail the call
-        again = compare_schemes(params, uniform(), ("shah",), trials=2,
-                                seed=1, engine="batched")
-    assert again["shah"].engine == "scalar"
+        again = compare_schemes(params, uniform(), ("rctree", "shah"),
+                                trials=2, seed=1, engine="batched")
+    assert again["rctree"].engine == "scalar"
+    assert again["shah"].engine == "batched"   # vectorized: no fallback
     scalar = compare_schemes(params, uniform(), ("star",), trials=2,
                              seed=1, engine="scalar")
     assert scalar["star"].engine == "scalar"
@@ -231,7 +234,7 @@ def test_plan_tr_tie_prefers_faster_link():
 
 def test_plan_tr_batch_matches_tiebreak():
     caps = caps_tensor([_tiebreak_net()])
-    res = BATCHED_SCHEMES["tr"](caps, TIEBREAK_PARAMS)
+    res = get_scheme("tr").batched(caps, TIEBREAK_PARAMS)
     assert res.parents[0].tolist() == [0, 0, 1, 0]
     scalar = plan_tr(_tiebreak_net(), TIEBREAK_PARAMS)
     assert res.times[0] == pytest.approx(scalar.time)

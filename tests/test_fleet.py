@@ -30,9 +30,9 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import (BATCHED_SCHEMES, CodeParams, OverlayNetwork,
-                        RepairPlan, SCHEMES, caps_tensor, plan_batch,
-                        plan_time, plans_from_batch, tree_flows)
+from repro.core import (CodeParams, OverlayNetwork, RepairPlan,
+                        caps_tensor, get_scheme, plan_many, plan_time,
+                        plans_from_batch, tree_flows)
 from repro.fleet import (Event, FixedPolicy, FleetMetrics, FleetSimulator,
                          FlexiblePolicy, LinkShareModel, RepairPolicy,
                          Scenario, apply_credit, capacity_weather,
@@ -70,7 +70,7 @@ def test_single_repair_matches_plan_time(scheme):
     assert m.completed == 1 and m.aborted == 0
     ids = [0] + list(range(1, PARAMS.d + 1))
     overlay = OverlayNetwork(caps[np.ix_(ids, ids)].tolist())
-    expect = SCHEMES[scheme](overlay, PARAMS).time
+    expect = get_scheme(scheme).scalar(overlay, PARAMS).time
     assert m.regen_times[0] == pytest.approx(expect, rel=1e-9)
     # the vulnerability window adds the queue wait (zero here beyond start)
     assert m.vulnerability_windows[0] == pytest.approx(expect, rel=1e-9)
@@ -214,13 +214,13 @@ def test_planners_near_zero_capacity_tail():
     nets = _tail_nets()
     caps = caps_tensor(nets)
     for s in SCHEME_NAMES:
-        res = BATCHED_SCHEMES[s](caps, PARAMS)
+        res = get_scheme(s).batched(caps, PARAMS)
         assert np.isfinite(res.times).all() and (res.times >= 0).all(), s
         assert (res.betas >= -1e-12).all(), s
         for net, plan in zip(nets, plans_from_batch(res, PARAMS)):
             assert plan.time >= 0 and math.isfinite(plan.time)
             plan.validate(net)
-        scalar = [SCHEMES[s](net, PARAMS) for net in nets]
+        scalar = [get_scheme(s).scalar(net, PARAMS) for net in nets]
         np.testing.assert_allclose(res.times, [p.time for p in scalar],
                                    rtol=1e-9, atol=1e-6, err_msg=s)
 
@@ -232,9 +232,9 @@ def test_planners_all_links_tied():
     net = OverlayNetwork(cap.tolist())
     caps = caps_tensor([net])
     for s in SCHEME_NAMES:
-        scalar = SCHEMES[s](net, PARAMS)
+        scalar = get_scheme(s).scalar(net, PARAMS)
         assert math.isfinite(scalar.time) and scalar.time >= 0, s
-        res = BATCHED_SCHEMES[s](caps, PARAMS)
+        res = get_scheme(s).batched(caps, PARAMS)
         assert res.times[0] == pytest.approx(scalar.time, rel=1e-9, abs=1e-9)
 
 
@@ -300,7 +300,7 @@ def test_plans_from_batch_validate():
         nets.append(OverlayNetwork(cap.tolist()))
     caps = caps_tensor(nets)
     for s in SCHEME_NAMES:
-        plans = plans_from_batch(plan_batch(caps, PARAMS, s), PARAMS)
+        plans = plans_from_batch(plan_many(caps, PARAMS, s), PARAMS)
         for net, plan in zip(nets, plans):
             plan.validate(net)
             assert plan.scheme == s
