@@ -1,0 +1,95 @@
+"""CI guard: the fleet default path reproduces the checked-in golden bitwise.
+
+Usage:
+
+    python benchmarks/check_fleet_golden.py
+
+Unlike ``check_planning_golden.py`` this guard does not diff a previously
+written BENCH file: it re-simulates every configuration pinned in
+``benchmarks/golden/fleet_quick_seed0.json`` fresh (they are quick-mode
+rows, cheap by construction) and asserts two things:
+
+* every golden configuration's ``Scenario`` carries ALL lifecycle and
+  robustness knobs at their defaults — the golden pins the *default* path
+  (pre-PR-3 dynamics, no estimate error, no brownouts, no watchdog, no
+  degraded-d), so a knob leaking into those rows is itself the bug, not a
+  reason to regenerate;
+* each fresh summary equals the golden row bitwise over the *union* of
+  keys, so a summary key added to ``FleetMetrics`` without regenerating
+  the golden fails here instead of drifting silently.
+
+Any diff means a simulator change altered the default-path dynamics —
+that must be a deliberate, golden-regenerating change, never a silent one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO_ROOT, "benchmarks", "golden",
+                      "fleet_quick_seed0.json")
+sys.path.insert(0, REPO_ROOT)
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+# every Scenario knob that changes fleet dynamics when flipped on; the
+# golden rows must carry all of them at these (inert) defaults
+ROBUSTNESS_DEFAULTS = {
+    "carryover": False,
+    "migration": False,
+    "estimate_noise": 0.0,
+    "estimate_refresh_period": 0.0,
+    "degrade_rate": 0.0,
+    "degrade_mean_duration": 0.0,
+    "degrade_lo": 0.0,
+    "degrade_hi": 0.0,
+    "degradations": (),
+    "watchdog_period": 0.0,
+    "degraded_d": False,
+}
+
+
+def main() -> int:
+    import benchmarks.fleet_scale as fs
+    from repro.fleet import make_policy, simulate
+
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    sweep = {name: (sc, pol) for name, sc, pol in fs._sweep(quick=True)}
+    params = fs._params()
+    problems = 0
+    for name, expect in golden["configs"].items():
+        if name not in sweep:
+            print(f"FAIL: golden config {name} missing from the quick sweep")
+            problems += 1
+            continue
+        sc, pol = sweep[name]
+        for knob, default in ROBUSTNESS_DEFAULTS.items():
+            if getattr(sc, knob) != default:
+                print(f"FAIL: {name}: golden row has {knob}="
+                      f"{getattr(sc, knob)!r}, want default {default!r}")
+                problems += 1
+        got = simulate(sc, make_policy(pol), params,
+                       seed=fs._config_seed(golden["root_seed"], name))
+        for key in sorted(set(expect) | set(got)):
+            if key not in expect:
+                print(f"FAIL: {name}.{key}: new summary key not in golden "
+                      f"(regenerate the golden deliberately)")
+                problems += 1
+            elif got.get(key) != expect[key]:
+                print(f"FAIL: {name}.{key}: golden {expect[key]!r} "
+                      f"!= got {got.get(key)!r}")
+                problems += 1
+    if problems:
+        print(f"fleet golden guard: {problems} problems across "
+              f"{len(golden['configs'])} configs")
+        return 1
+    n_vals = sum(len(v) for v in golden["configs"].values())
+    print(f"fleet golden guard OK: {len(golden['configs'])} configs, "
+          f"{n_vals} values bitwise equal")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

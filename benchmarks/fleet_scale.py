@@ -20,7 +20,14 @@ in-flight plan migration off (``..._<pol>``, the default path), carryover
 only (``..._carry``), and carryover + migration (``..._mig``).  Rows whose
 name carries no lifecycle suffix run the pre-PR-3 dynamics bitwise;
 ``benchmarks/golden/fleet_quick_seed0.json`` pins their quick-mode values
-and CI fails on any diff (see tests/test_fleet.py and ci.yml).
+and CI fails on any diff (see tests/test_fleet.py, ci.yml, and
+``benchmarks/check_fleet_golden.py``).
+
+A plan-vs-reality robustness column (ISSUE 6) runs the ``stragglers``
+(silent link brownouts) and ``foggy_estimates`` (stale/noisy capacity
+estimates) scenarios with mitigation off and on (``..._robust``:
+watchdog + retry/backoff + degraded-d admission); each summary carries the
+plan-error distribution (realized vs predicted (re)plan ETA).
 
 CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N]`` (CI runs the
 ``--quick`` smoke, which asserts the artifact exists and backlog is finite).
@@ -35,7 +42,7 @@ import time
 import zlib
 
 from repro.core import CodeParams
-from repro.fleet import SCENARIOS, make_policy, simulate
+from repro.fleet import SCENARIOS, make_policy, mitigated, simulate
 
 from .common import quick_mode, row, save_artifact
 
@@ -93,6 +100,18 @@ def _sweep(quick: bool):
                dataclasses.replace(sc, carryover=True), pol)
         yield (f"flaky_providers_n{n}_{pol}_mig",
                dataclasses.replace(sc, carryover=True, migration=True), pol)
+    # plan-vs-reality robustness column (ISSUE 6): silent brownouts
+    # (stragglers) and stale/noisy capacity estimates (foggy_estimates),
+    # each with mitigation off (the injections alone) and on
+    # (``..._robust``: watchdog + retry/backoff + degraded-d).  The
+    # plan-error percentiles quantify how far predictions drift from
+    # reality; the robust rows show what the watchdog buys back.
+    n, lam = 16, 2e-3
+    duration = budget / (lam * n)
+    for kind in ("stragglers", "foggy_estimates"):
+        sc = SCENARIOS[kind](n, failure_rate=lam, duration=duration)
+        yield f"{kind}_n{n}_flexible", sc, "flexible"
+        yield f"{kind}_n{n}_flexible_robust", mitigated(sc), "flexible"
 
 
 def run(root_seed: int = 0):
@@ -114,7 +133,8 @@ def run(root_seed: int = 0):
             f"p99={summary['regen_p99']:.3f}s "
             f"vuln_p99={summary['vulnerability_p99']:.3f}s "
             f"mig={summary['migrations']:.0f} "
-            f"saved={summary['work_saved_fraction']:.2f}"))
+            f"saved={summary['work_saved_fraction']:.2f} "
+            f"plan_err={summary['plan_err_mean']:.2f}"))
     artifact = {"quick": quick, "root_seed": root_seed, "configs": configs}
     save_artifact("fleet_scale", artifact)
     with open(os.path.join(REPO_ROOT, "BENCH_fleet.json"), "w") as f:

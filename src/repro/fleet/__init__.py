@@ -16,8 +16,9 @@ from .events import Event, EventQueue
 from .metrics import FleetMetrics
 from .policy import FixedPolicy, FlexiblePolicy, RepairPolicy, make_policy
 from .scenario import (SCENARIOS, Scenario, capacity_weather,
-                       flaky_providers, hot_reads, rack_bursts, steady,
-                       tiered, tiered_capacities)
+                       flaky_providers, foggy_estimates, hot_reads,
+                       mitigated, rack_bursts, steady, stragglers, tiered,
+                       tiered_capacities)
 from .sharing import ActiveRepair, LinkShareModel, apply_credit, plan_links
 from .sim import FleetSimulator, QueuedRepair, simulate
 
@@ -26,7 +27,7 @@ __all__ = [
     "FleetMetrics", "FleetSimulator", "FixedPolicy", "FlexiblePolicy",
     "HEALTHY", "LinkShareModel", "QueuedRepair", "REPAIRING",
     "RepairPolicy", "SCENARIOS", "Scenario", "apply_credit",
-    "capacity_weather", "flaky_providers", "hot_reads", "make_policy",
-    "plan_links", "rack_bursts", "simulate", "steady", "tiered",
-    "tiered_capacities",
+    "capacity_weather", "flaky_providers", "foggy_estimates", "hot_reads",
+    "make_policy", "mitigated", "plan_links", "rack_bursts", "simulate",
+    "steady", "stragglers", "tiered", "tiered_capacities",
 ]

@@ -21,6 +21,18 @@ CAPACITY_SHOCK = "capacity_shock"
 READ_ARRIVAL = "read_arrival"
 READ_DEPARTURE = "read_departure"
 
+# Robustness family (ISSUE 6).  DEGRADE multiplies a live node's *outgoing*
+# link rates by a factor in [0, 1) without failing the host — factor 0.0 is
+# a full stall, the fault class the provider-loss abort path cannot see;
+# RECOVER restores the node (payload carries a generation counter so a
+# re-degrade supersedes a stale recovery).  ESTIMATE_REFRESH re-snapshots
+# the planner's believed capacity matrix; WATCHDOG is the periodic progress
+# check that drives retry/backoff mitigation.
+DEGRADE = "degrade"
+RECOVER = "recover"
+ESTIMATE_REFRESH = "estimate_refresh"
+WATCHDOG = "watchdog"
+
 
 @dataclasses.dataclass(frozen=True)
 class Event:

@@ -22,13 +22,19 @@ needed for percentiles.
   equality — deep-failure excursions keep losing data;
 * repair-lifecycle counters (PR 3) — migrations, carryover vs cold aborts,
   and the work-saved fraction (banked blocks credited at re-admissions and
-  migrations as a share of the plans' totals).
+  migrations as a share of the plans' totals);
+* plan-vs-reality (ISSUE 6) — the plan-error distribution (realized
+  duration of each completed (re)plan segment against the ETA predicted at
+  (re)plan time under the *believed* capacities; positive = late), plus
+  watchdog counters: repairs flagged lagging, in-place rescue replans,
+  straggler evictions, give-ups (retry budget exhausted), degraded-d
+  admissions (d' < d helpers), and injected degrade events.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,6 +69,15 @@ class FleetMetrics:
     work_saved: float = 0.0
     data_loss_events: int = 0
 
+    # -- plan-vs-reality robustness (ISSUE 6) -------------------------------
+    watchdog_flags: int = 0            # repairs flagged lagging/stalled
+    watchdog_replans: int = 0          # accepted in-place rescue replans
+    evictions: int = 0                 # straggling providers evicted
+    watchdog_giveups: int = 0          # retry budget exhausted
+    degraded_admissions: int = 0       # repairs admitted with d' < d
+    degrade_events: int = 0            # injected + Markov brownouts
+
+    plan_errors: List[float] = dataclasses.field(default_factory=list)
     credit_fractions: List[float] = dataclasses.field(default_factory=list)
     regen_times: List[float] = dataclasses.field(default_factory=list)
     vulnerability_windows: List[float] = dataclasses.field(
@@ -98,11 +113,39 @@ class FleetMetrics:
         self.max_backlog = max(self.max_backlog, backlog)
 
     def on_complete(self, fail_time: float, start_time: float,
-                    end_time: float) -> None:
+                    end_time: float, plan_t0: Optional[float] = None,
+                    predicted: Optional[float] = None) -> None:
         self.completed += 1
         self.regen_times.append(end_time - start_time)
         self.wait_times.append(start_time - fail_time)
         self.vulnerability_windows.append(end_time - fail_time)
+        # plan error: the realized duration of the final (re)plan segment
+        # against its believed-capacity prediction — relative, so 0 means
+        # the plan's map matched the territory and +1 means it took twice
+        # as long as predicted
+        if (plan_t0 is not None and predicted is not None
+                and math.isfinite(predicted) and predicted > 0):
+            self.plan_errors.append((end_time - plan_t0) / predicted - 1.0)
+
+    def on_watchdog_flag(self) -> None:
+        self.watchdog_flags += 1
+
+    def on_watchdog_replan(self, saved: float, planned: float) -> None:
+        """A lagging repair was rescued in place by a credited replan."""
+        self.watchdog_replans += 1
+        self.on_carryover(saved, planned)
+
+    def on_eviction(self) -> None:
+        self.evictions += 1
+
+    def on_watchdog_giveup(self) -> None:
+        self.watchdog_giveups += 1
+
+    def on_degraded_admission(self) -> None:
+        self.degraded_admissions += 1
+
+    def on_degrade(self) -> None:
+        self.degrade_events += 1
 
     def on_abort(self, carryover: bool = False) -> None:
         self.aborted += 1
@@ -159,4 +202,14 @@ class FleetMetrics:
             "data_loss_events": self.data_loss_events,
             "expected_data_losses": self.expected_losses,
             "mttdl_estimate": mttdl,
+            "watchdog_flags": self.watchdog_flags,
+            "watchdog_replans": self.watchdog_replans,
+            "evictions": self.evictions,
+            "watchdog_giveups": self.watchdog_giveups,
+            "degraded_admissions": self.degraded_admissions,
+            "degrade_events": self.degrade_events,
+            "plan_err_mean": (float(np.mean(self.plan_errors))
+                              if self.plan_errors else 0.0),
+            "plan_err_p50": self._pct(self.plan_errors, 50),
+            "plan_err_p99": self._pct(self.plan_errors, 99),
         }

@@ -52,11 +52,15 @@ class RepairPolicy:
 
     def replan(self, caps: np.ndarray, params: CodeParams,
                ) -> List[Optional[RepairPlan]]:
-        """Propose replacement plans for *in-flight* repairs (migration).
+        """Propose replacement plans for *in-flight* repairs.
 
         Called by the simulator at capacity-shock and provider-loss epochs
-        when ``Scenario.migration`` is on, with one ``(R, d+1, d+1)``
-        tensor of *self-excluded* residual overlays — each in-flight
+        when ``Scenario.migration`` is on, and — single-row — by the
+        watchdog's rescue step when a flagged repair's first mitigation
+        attempt replans it in place (``Scenario.watchdog_period`` > 0,
+        see ``sim.FleetSimulator._watchdog_replan``).  Either way the
+        input is one ``(R, d+1, d+1)`` tensor of *self-excluded* residual
+        overlays — each in-flight
         repair's own link occupancy is discounted, so row r is the share
         snapshot that repair would plan under if it released its current
         links.  Return one plan (or ``None`` to decline) per row, same

@@ -54,6 +54,12 @@ ProviderPicker = Callable[[int, List[int], np.random.Generator], List[int]]
 # (time, node) pairs injected on top of / instead of the Poisson process
 InjectedFailure = Tuple[float, int]
 
+# (time, node, factor, duration): at ``time`` the node's outgoing link
+# rates are multiplied by ``factor`` in [0, 1) (0.0 = full stall) for
+# ``duration`` seconds — deterministic straggler injections for tests,
+# on top of / instead of the Markov degrade process
+InjectedDegrade = Tuple[float, int, float, float]
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -89,6 +95,32 @@ class Scenario:
     #                                   aborts; credit them at re-admission
     migration: bool = False           # offer in-flight repairs a re-plan at
     #                                   capacity-shock / provider-loss epochs
+    # -- plan-vs-reality robustness (ISSUE 6; everything OFF by default:
+    #    the default path reproduces the pre-robustness dynamics bitwise) --
+    estimate_noise: float = 0.0       # relative noise on each believed
+    #                                   capacity snapshot, U[1-e, 1+e]
+    estimate_refresh_period: float = 0.0  # seconds between believed-matrix
+    #                                   snapshots; 0 = refresh every event
+    #                                   epoch (fresh but noisy).  Estimate
+    #                                   error is on iff noise > 0 or
+    #                                   refresh period > 0
+    degrade_rate: float = 0.0         # per-node Poisson rate of silent
+    #                                   outgoing-link brownouts
+    degrade_mean_duration: float = 0.0    # mean brownout length (Exp)
+    degrade_lo: float = 0.0           # brownout rate-multiplier bounds,
+    degrade_hi: float = 0.0           # drawn U[lo, hi] in [0, 1)
+    degradations: Tuple[InjectedDegrade, ...] = ()  # deterministic stalls
+    watchdog_period: float = 0.0      # progress-check interval; 0 = no
+    #                                   watchdog (no mitigation)
+    watchdog_lag: float = 2.0         # flag a repair once its banked
+    #                                   progress falls below 1/lag of the
+    #                                   plan-predicted trajectory
+    watchdog_retries: int = 3         # straggler evictions per repair
+    #                                   before the watchdog gives up
+    watchdog_backoff: float = 2.0     # exponential re-check backoff base
+    degraded_d: bool = False          # admit with d' in [k, d) helpers when
+    #                                   fewer than d are healthy (functional
+    #                                   repair stays sound for any d >= k)
 
     def __post_init__(self):
         if self.num_nodes < 2:
@@ -101,6 +133,58 @@ class Scenario:
             raise ValueError("read_duration must be positive")
         if self.shock_lo < 0 or self.shock_hi < self.shock_lo:
             raise ValueError("need 0 <= shock_lo <= shock_hi")
+        if self.max_concurrent < 1:
+            raise ValueError(
+                f"max_concurrent must be >= 1, got {self.max_concurrent}: "
+                f"an admission budget of zero can never start a repair")
+        if not 0.0 <= self.rack_burst_prob <= 1.0:
+            raise ValueError(
+                f"rack_burst_prob must be a probability in [0, 1], got "
+                f"{self.rack_burst_prob}")
+        if self.rack_burst_extra < 0:
+            raise ValueError(
+                f"rack_burst_extra must be >= 0, got {self.rack_burst_extra}")
+        if self.read_fanin < 0:
+            raise ValueError(
+                f"read_fanin must be >= 0 (0 = params.k), got "
+                f"{self.read_fanin}")
+        if not 0.0 <= self.estimate_noise < 1.0:
+            raise ValueError(
+                f"estimate_noise must be in [0, 1), got "
+                f"{self.estimate_noise}: noise >= 1 lets a believed "
+                f"capacity hit zero on a live link")
+        if self.estimate_refresh_period < 0:
+            raise ValueError("estimate_refresh_period must be non-negative")
+        if self.degrade_rate < 0:
+            raise ValueError("degrade_rate must be non-negative")
+        if self.degrade_rate > 0 and self.degrade_mean_duration <= 0:
+            raise ValueError(
+                "degrade_rate > 0 needs degrade_mean_duration > 0")
+        if not 0.0 <= self.degrade_lo <= self.degrade_hi:
+            raise ValueError("need 0 <= degrade_lo <= degrade_hi")
+        if self.degrade_hi >= 1.0:
+            raise ValueError(
+                f"degrade factors must stay below 1, got degrade_hi="
+                f"{self.degrade_hi}: a multiplier >= 1 is not a brownout")
+        for inj in self.degradations:
+            t, node, factor, dur = inj
+            if not (0.0 <= factor < 1.0) or dur <= 0 or t < 0:
+                raise ValueError(
+                    f"bad degradation injection {inj}: need time >= 0, "
+                    f"factor in [0, 1), duration > 0")
+        if self.watchdog_period < 0:
+            raise ValueError("watchdog_period must be non-negative")
+        if self.watchdog_lag < 1.0:
+            raise ValueError(
+                f"watchdog_lag must be >= 1, got {self.watchdog_lag}: a "
+                f"threshold below 1 flags repairs that are on schedule")
+        if self.watchdog_retries < 0:
+            raise ValueError("watchdog_retries must be non-negative")
+        if self.watchdog_backoff < 1.0:
+            raise ValueError(
+                f"watchdog_backoff must be >= 1, got "
+                f"{self.watchdog_backoff}: a base below 1 re-checks "
+                f"faster after every failure")
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +255,48 @@ def flaky_providers(n: int, failure_rate: float = 4e-3,
                     max_concurrent=8)
 
 
+def stragglers(n: int, failure_rate: float = 2e-3,
+               duration: float = 4_000.0) -> Scenario:
+    """Silent straggler/stall pressure: nodes' outgoing links brown out to
+    a U[0, 0.1] multiplier (often a near-full stall) for minutes at a time
+    *without the host dying* — the fault class the provider-loss abort
+    path cannot see.  Today's simulator silently waits out a stalled link;
+    pair with :func:`mitigated` to measure what the watchdog + eviction +
+    degraded-d stack claws back."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    capacity_model=uniform_matrix(2.0, 40.0),
+                    degrade_rate=1e-3, degrade_mean_duration=400.0,
+                    degrade_lo=0.0, degrade_hi=0.1,
+                    max_concurrent=8)
+
+
+def foggy_estimates(n: int, failure_rate: float = 2e-3,
+                    duration: float = 4_000.0) -> Scenario:
+    """Stale, noisy capacity estimates under weather: the believed matrix
+    policies plan against is a U[1-0.35, 1+0.35]-noised snapshot refreshed
+    every 300 s, while the true capacities are re-shocked every 120 s —
+    predicted and realized ETAs diverge (the plan-error distribution in
+    the metrics).  Pair with :func:`mitigated` to let the watchdog rescue
+    the worst-planned repairs."""
+    return Scenario(num_nodes=n, duration=duration,
+                    failure_rate=failure_rate,
+                    capacity_model=uniform_matrix(1.0, 30.0),
+                    shock_period=120.0, shock_lo=0.2, shock_hi=1.0,
+                    estimate_noise=0.35, estimate_refresh_period=300.0,
+                    max_concurrent=8)
+
+
+def mitigated(sc: Scenario, watchdog_period: float = 25.0) -> Scenario:
+    """The robustness mitigation stack ON for A/B comparisons: progress
+    watchdog (replan -> straggler eviction with retry/backoff), banked-
+    block carryover so evictions keep received work, and degraded-d
+    admission so repairs stop queueing forever when fewer than d helpers
+    are healthy.  The scenario's fault injection knobs are left as-is."""
+    return dataclasses.replace(sc, carryover=True, degraded_d=True,
+                               watchdog_period=watchdog_period)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "rack_bursts": rack_bursts,
@@ -178,4 +304,6 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "hot_reads": hot_reads,
     "tiered": tiered,
     "flaky_providers": flaky_providers,
+    "stragglers": stragglers,
+    "foggy_estimates": foggy_estimates,
 }

@@ -32,12 +32,24 @@ queued slot, and on re-admission or in-flight migration
 only the missing flows are re-transferred.  With carryover and migration
 disabled the bank stays empty and every arithmetic step reduces bitwise to
 the scalar-\\ ``remaining`` model this replaces.
+
+Plan vs reality (ISSUE 6): the model distinguishes a *believed* view (what
+policies plan against and ETAs are predicted from) from the *true* view
+(what flows actually achieve).  ``believed`` is an optional separate
+capacity matrix the simulator refreshes on its estimate schedule —
+:meth:`residual_overlay`, :meth:`residual` and :meth:`admission_time` read
+it; ``out_mult`` is an optional per-source-node multiplier vector modelling
+silent link brownouts (stragglers/stalls) — :meth:`share` and
+:meth:`nominal_time` apply it, so actual progress slows while the believed
+view stays oblivious.  Both default to off (``believed=None`` aliases the
+true matrix, ``out_mult=None`` skips the multiply), which keeps the default
+path bitwise identical to the pre-robustness model.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -124,6 +136,17 @@ class ActiveRepair:
     bank: Dict[Link, float] = dataclasses.field(default_factory=dict)
     remaining: float = 1.0
     nominal: float = math.inf
+    # -- plan-vs-reality bookkeeping (ISSUE 6; inert unless the watchdog /
+    #    estimate machinery is on, except the plan-error observation) ------
+    plan_t0: float = 0.0                # time of the last (re)plan
+    predicted: float = math.inf         # ETA predicted at the last (re)plan
+    #                                     under the *believed* capacities
+    retries: int = 0                    # watchdog mitigation attempts so far
+    next_check: float = 0.0             # watchdog skips this repair until
+    #                                     then (exponential backoff)
+    avoid: Tuple[int, ...] = ()         # providers evicted as stragglers —
+    #                                     not re-drawn while alternatives
+    #                                     exist
 
     @property
     def providers(self) -> List[int]:
@@ -187,11 +210,33 @@ class LinkShareModel:
 
     Holds a *reference* to ``caps`` so capacity shocks (the simulator
     rescales the matrix in place) are seen by the next ``recompute``.
+
+    ``believed`` (optional) is the planner-side view of the matrix: when
+    set, predictions (:meth:`residual`, :meth:`residual_overlay`,
+    :meth:`admission_time`) read it while actual rates (:meth:`share`,
+    :meth:`nominal_time`) keep reading ``caps``.  ``out_mult`` (optional)
+    is a per-source-node rate multiplier for silent brownouts: it scales
+    the *true* rates only — a degraded node looks fine to the planner.
     """
 
-    def __init__(self, caps: np.ndarray):
+    def __init__(self, caps: np.ndarray,
+                 believed: Optional[np.ndarray] = None):
         self.caps = caps
+        self.believed = believed
+        self.out_mult: Optional[np.ndarray] = None
         self.users: Dict[Link, int] = {}
+
+    def true_cap(self, link: Link) -> float:
+        """Actual capacity of ``link`` right now (brownouts applied)."""
+        c = float(self.caps[link])
+        if self.out_mult is not None:
+            c *= float(self.out_mult[link[0]])
+        return c
+
+    def believed_cap(self, link: Link) -> float:
+        """Capacity of ``link`` according to the planner's current view."""
+        mat = self.caps if self.believed is None else self.believed
+        return float(mat[link])
 
     def acquire(self, links: Sequence[Tuple[Link, float]]) -> None:
         for link, _ in links:
@@ -207,13 +252,13 @@ class LinkShareModel:
 
     def share(self, link: Link) -> float:
         """Bandwidth each current occupant of ``link`` receives."""
-        c = float(self.caps[link])
+        c = self.true_cap(link)
         m = max(self.users.get(link, 0), 1)
         return c / m
 
     def residual(self, link: Link) -> float:
-        """Bandwidth a *new* occupant of ``link`` would receive."""
-        c = float(self.caps[link])
+        """Bandwidth a *new* occupant of ``link`` would get, as believed."""
+        c = self.believed_cap(link)
         return c / (self.users.get(link, 0) + 1)
 
     def residual_overlay(self, ids: Sequence[int],
@@ -226,9 +271,14 @@ class LinkShareModel:
         claim on each named link: when an *in-flight* repair evaluates its
         own migration, its current occupancy must not be charged against
         the plans that would replace it.
+
+        Reads the *believed* matrix when one is set — this is the
+        planner's map, not the territory (``sim.py`` keeps them apart when
+        estimate error is injected).
         """
         idx = np.asarray(ids)
-        cap = self.caps[np.ix_(idx, idx)].copy()
+        mat = self.caps if self.believed is None else self.believed
+        cap = mat[np.ix_(idx, idx)].copy()
         np.fill_diagonal(cap, 0.0)
         for i, u in enumerate(idx):
             for j, v in enumerate(idx):
@@ -246,12 +296,13 @@ class LinkShareModel:
         """Store-and-forward duration the given residual demands would see
         if admitted *now* (each link charged as one new occupant).  With
         ``exclude`` = an in-flight repair's current links, this is the
-        migrated-plan ETA the simulator compares against ``eta()``."""
+        migrated-plan ETA the simulator compares against ``eta()``.  A
+        *prediction*, so it reads the believed matrix when one is set."""
         t = 0.0
         for link, f in links:
             if f <= FLOW_EPS:
                 continue
-            c = float(self.caps[link])
+            c = self.believed_cap(link)
             m = self.users.get(link, 0)
             if link in exclude and m:
                 m -= 1

@@ -41,13 +41,41 @@ Failure model details:
   conditional ruin intensity for an MTTDL estimate that works at sane
   failure rates.
 
+Plan-vs-reality robustness (ISSUE 6), all OFF by default:
+
+* **Estimate error** (``Scenario.estimate_noise`` / ``estimate_refresh_
+  period``): policies plan against a *believed* capacity matrix — a noisy,
+  periodically-refreshed snapshot of the true effective capacities — while
+  flows progress at true rates.  Predicted and realized ETAs diverge; the
+  metrics record the plan-error distribution.
+* **Straggler/stall injection** (``degrade_rate`` + Markov recovery, or
+  deterministic ``degradations``): a live node's outgoing link rates are
+  multiplied by a factor in [0, 1) without failing the host — invisible to
+  the provider-loss abort path *and* to the believed matrix until the next
+  estimate refresh (when estimates are off, the fresh believed view models
+  plan-time capacities only: brownouts are data-plane faults monitoring
+  never reports).
+* **Watchdog + retry/backoff + graceful degradation**
+  (``watchdog_period`` > 0): every period, each repair's banked progress
+  is compared against its plan-predicted trajectory.  A repair below
+  ``1/watchdog_lag`` of schedule (or outright stalled) gets escalating
+  mitigation — first a credited in-place replan over the current believed
+  capacities, then eviction of the straggling provider (bottleneck-link
+  source) with the banked blocks carried over and a fresh helper drawn
+  under exponential backoff, up to ``watchdog_retries`` times.  With
+  ``degraded_d`` on, a repair that cannot find d healthy helpers is
+  admitted with d' in [k, d) helpers (functional repair is sound for any
+  d >= k, Dimakis et al. 0803.0632) instead of queueing forever.
+
 Determinism: one root ``seed`` spawns named child streams (capacities,
-failures, providers, reads, shocks) via ``np.random.default_rng([seed,
-stream])``, and all same-time events have fixed precedence (completions,
-then heap order, then the Poisson clock), so a run is bitwise reproducible.
+failures, providers, reads, shocks, estimates, degrades) via
+``np.random.default_rng([seed, stream])``, and all same-time events have
+fixed precedence (completions, then heap order, then the Poisson failure
+clock, then the Poisson degrade clock), so a run is bitwise reproducible.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -56,15 +84,17 @@ import numpy as np
 from repro.core import CodeParams
 
 from .cluster import ClusterState
-from .events import (CAPACITY_SHOCK, Event, EventQueue, FAILURE,
-                     READ_ARRIVAL, READ_DEPARTURE)
+from .events import (CAPACITY_SHOCK, DEGRADE, ESTIMATE_REFRESH, Event,
+                     EventQueue, FAILURE, READ_ARRIVAL, READ_DEPARTURE,
+                     RECOVER, WATCHDOG)
 from .metrics import FleetMetrics
 from .policy import RepairPolicy
 from .scenario import Scenario
 from .sharing import (ActiveRepair, Link, LinkShareModel, apply_credit,
                       plan_links)
 
-_STREAMS = {"caps": 0, "fail": 1, "prov": 2, "read": 3, "shock": 4}
+_STREAMS = {"caps": 0, "fail": 1, "prov": 2, "read": 3, "shock": 4,
+            "est": 5, "degrade": 6}
 
 
 class QueuedRepair(NamedTuple):
@@ -74,12 +104,19 @@ class QueuedRepair(NamedTuple):
     carryover abort requeued the slot (None on a fresh failure);
     ``survivors`` are the aborted plan's still-useful providers, kept at
     re-admission so the banked links actually reappear in the new plan.
+    ``avoid``/``retries``/``next_check`` travel with a slot the watchdog
+    evicted a straggling provider from: evicted providers are not re-drawn
+    while alternatives exist, the mitigation budget persists across the
+    requeue, and the backoff clock is not reset by re-admission.
     """
 
     fail_time: float
     node: int
     bank: Optional[Dict[Link, float]] = None
     survivors: Tuple[int, ...] = ()
+    avoid: Tuple[int, ...] = ()
+    retries: int = 0
+    next_check: float = 0.0
 
 
 class FleetSimulator:
@@ -112,6 +149,25 @@ class FleetSimulator:
         self._read_seq = 0
         self._replan_pending = False
 
+        # -- straggler/stall injection: per-node outgoing-rate multipliers.
+        #    None (no degrade machinery configured) keeps the share model's
+        #    arithmetic bitwise identical to the pre-robustness path.
+        self.degrade: Optional[np.ndarray] = None
+        self._degrade_gen = [0] * n      # stale-RECOVER supersession
+        if scenario.degrade_rate > 0 or scenario.degradations:
+            self.degrade = np.ones(n, dtype=np.float64)
+            self.shares.out_mult = self.degrade
+
+        # -- estimate error: the believed matrix policies plan against.
+        #    None (no estimate machinery) aliases the true matrix — the
+        #    perfectly-fresh default.
+        self._estimates_on = (scenario.estimate_noise > 0
+                              or scenario.estimate_refresh_period > 0)
+        self.believed: Optional[np.ndarray] = None
+        if self._estimates_on:
+            self.believed = self.cluster.caps.copy()
+            self.shares.believed = self.believed
+
         self.events = EventQueue()
         for t, node in sorted(scenario.failures):
             self.events.push(Event(t, FAILURE, (node,)))
@@ -121,7 +177,17 @@ class FleetSimulator:
             self.events.push(Event(
                 float(self.rng["read"].exponential(1.0 / scenario.read_rate)),
                 READ_ARRIVAL))
+        for t, node, factor, dur in sorted(scenario.degradations):
+            self.events.push(Event(t, DEGRADE, (node, factor, dur)))
+        if self._estimates_on:
+            self._refresh_estimates()    # t=0 snapshot
+            if scenario.estimate_refresh_period > 0:
+                self.events.push(Event(scenario.estimate_refresh_period,
+                                       ESTIMATE_REFRESH))
+        if scenario.watchdog_period > 0:
+            self.events.push(Event(scenario.watchdog_period, WATCHDOG))
         self.next_fail = self._draw_next_fail()
+        self.next_degrade = self._draw_next_degrade()
 
         self.metrics = FleetMetrics(n=n, k=params.k,
                                     failure_rate=scenario.failure_rate)
@@ -133,6 +199,67 @@ class FleetSimulator:
         if rate <= 0:
             return math.inf
         return self.now + float(self.rng["fail"].exponential(1.0 / rate))
+
+    def _draw_next_degrade(self) -> float:
+        """Aggregate brownout clock.  Every slot's NIC is eligible
+        regardless of health state (a brownout is a link-level fault, not
+        a storage fault), so the rate is constant and the clock never
+        needs redrawing on failures — the degrade stream stays independent
+        of every other stream."""
+        rate = self.scenario.degrade_rate * self.scenario.num_nodes
+        if rate <= 0:
+            return math.inf
+        return self.now + float(self.rng["degrade"].exponential(1.0 / rate))
+
+    # -- straggler/stall injection ------------------------------------------
+
+    def _apply_degrade(self, node: int, factor: float,
+                       duration: float) -> None:
+        """Multiply ``node``'s outgoing link rates by ``factor`` for
+        ``duration`` seconds.  Silent: no abort, no replan offer — only
+        actual flow rates change (the run loop recomputes nominals every
+        iteration).  A re-degrade supersedes the pending recovery via the
+        generation counter."""
+        assert self.degrade is not None
+        self.degrade[node] = factor
+        self._degrade_gen[node] += 1
+        self.events.push(Event(self.now + duration, RECOVER,
+                               (node, self._degrade_gen[node])))
+        self.metrics.on_degrade()
+
+    def _poisson_degrade(self) -> None:
+        sc = self.scenario
+        rngd = self.rng["degrade"]
+        victim = int(rngd.integers(sc.num_nodes))
+        factor = float(rngd.uniform(sc.degrade_lo, sc.degrade_hi))
+        duration = float(rngd.exponential(sc.degrade_mean_duration))
+        self._apply_degrade(victim, factor, duration)
+        self.next_degrade = self._draw_next_degrade()
+
+    def _recover(self, node: int, gen: int) -> None:
+        if self.degrade is not None and self._degrade_gen[node] == gen:
+            self.degrade[node] = 1.0
+
+    # -- estimate error -----------------------------------------------------
+
+    def _refresh_estimates(self) -> None:
+        """Re-snapshot the believed matrix from the true effective
+        capacities (shocks *and* brownouts included — monitoring measures
+        achieved rates), multiplied by per-link U[1-e, 1+e] noise.
+        Between refreshes the belief goes stale: shocks and brownouts that
+        happen after the snapshot are invisible to the planner."""
+        assert self.believed is not None
+        eff = self.cluster.caps
+        if self.degrade is not None:
+            eff = eff * self.degrade[:, None]
+        noise = self.scenario.estimate_noise
+        if noise > 0:
+            mult = self.rng["est"].uniform(1.0 - noise, 1.0 + noise,
+                                           size=eff.shape)
+            self.believed[:] = eff * mult
+        else:
+            self.believed[:] = eff
+        np.fill_diagonal(self.believed, 0.0)
 
     # -- event handlers -----------------------------------------------------
 
@@ -247,20 +374,32 @@ class FleetSimulator:
     # -- repair admission ---------------------------------------------------
 
     def _pick_providers(self, failed: int, healthy: List[int],
-                        survivors: Sequence[int] = ()) -> List[int]:
-        """Choose d providers.  ``survivors`` (still-healthy providers of a
-        carryover-aborted plan) are kept so the banked links can be
-        re-credited, and only the deficit is drawn fresh; with no survivors
-        the draw is identical to the pre-carryover uniform sample."""
+                        survivors: Sequence[int] = (),
+                        d: Optional[int] = None,
+                        avoid: Sequence[int] = ()) -> List[int]:
+        """Choose ``d`` providers (default ``params.d``).  ``survivors``
+        (still-healthy providers of a carryover-aborted plan) are kept so
+        the banked links can be re-credited, and only the deficit is drawn
+        fresh; with no survivors the draw is identical to the
+        pre-carryover uniform sample.  ``avoid`` names watchdog-evicted
+        stragglers: they are excluded from the fresh draw while enough
+        alternatives exist (best effort — with a thin pool they come back
+        into play rather than starving the repair)."""
+        if d is None:
+            d = self.params.d
         if self.scenario.provider_picker is not None:
             return list(self.scenario.provider_picker(failed, healthy,
                                                       self.rng["prov"]))
         alive = self.cluster.healthy_set()
-        keep = [s for s in survivors if s in alive][:self.params.d]
-        deficit = self.params.d - len(keep)
+        keep = [s for s in survivors if s in alive][:d]
+        deficit = d - len(keep)
         if not deficit:
             return keep
         pool = [h for h in healthy if h not in keep]
+        if avoid:
+            trimmed = [h for h in pool if h not in avoid]
+            if len(trimmed) >= deficit:
+                pool = trimmed
         idx = self.rng["prov"].choice(len(pool), size=deficit,
                                       replace=False)
         return keep + [pool[int(i)] for i in idx]
@@ -278,31 +417,66 @@ class FleetSimulator:
         case) exactly one batched planning call is made per epoch.
         """
         deferred: List[QueuedRepair] = []
+        sc = self.scenario
         while True:
-            startable: List[Tuple[QueuedRepair, List[int]]] = []
+            startable: List[Tuple[QueuedRepair, List[int], CodeParams]] = []
             while (self.queue
                    and len(self.active) + len(startable)
-                   < self.scenario.max_concurrent):
+                   < sc.max_concurrent):
                 healthy = self.cluster.healthy_nodes()
-                if len(healthy) < self.params.d:
-                    break
+                d_eff = self.params.d
+                if len(healthy) < d_eff:
+                    if sc.degraded_d and len(healthy) >= self.params.k:
+                        # graceful degradation: functional repair with
+                        # d' = |healthy| in [k, d) helpers instead of
+                        # queueing until the population recovers
+                        d_eff = len(healthy)
+                    else:
+                        break
                 q = self.queue.pop(0)
                 self.cluster.start_repair(q.node)
-                ids = [q.node] + self._pick_providers(q.node, healthy,
-                                                      q.survivors)
-                if len(set(ids)) != self.params.d + 1:
-                    raise ValueError(
-                        f"provider picker returned {ids[1:]} for slot "
-                        f"{q.node}: need {self.params.d} distinct providers "
-                        f"!= the slot")
-                startable.append((q, ids))
+                try:
+                    ids = [q.node] + self._pick_providers(
+                        q.node, healthy, q.survivors, d_eff, q.avoid)
+                    if len(set(ids)) != d_eff + 1:
+                        raise ValueError(
+                            f"provider picker returned {ids[1:]} for slot "
+                            f"{q.node}: need {d_eff} distinct providers "
+                            f"!= the slot")
+                except Exception:
+                    # roll back every slot this batch already flipped to
+                    # REPAIRING (no ActiveRepair exists for them yet) and
+                    # restore the queue, so a picker error leaves the
+                    # cluster consistent instead of slots wedged in
+                    # REPAIRING with no repair that could ever finish
+                    self.cluster.abort_repair(q.node)
+                    for qq, _, _ in startable:
+                        self.cluster.abort_repair(qq.node)
+                    self.queue = ([qq for qq, _, _ in startable] + [q]
+                                  + self.queue + deferred)
+                    raise
+                params_eff = (self.params if d_eff == self.params.d else
+                              dataclasses.replace(self.params, d=d_eff))
+                startable.append((q, ids, params_eff))
             if not startable:
                 break
-            overlays = np.stack([self.shares.residual_overlay(ids)
-                                 for _, ids in startable])
-            plans = self.policy.plan_batch(overlays, self.params)
+            # one batched planning call per distinct repair fan-out — one
+            # call total on the default path (degraded-d admissions only
+            # happen when the cluster is nearly dead)
+            by_d: Dict[int, List[int]] = {}
+            for i, (_, ids, _) in enumerate(startable):
+                by_d.setdefault(len(ids) - 1, []).append(i)
+            plans: list = [None] * len(startable)
+            for d_eff in sorted(by_d):
+                rows = by_d[d_eff]
+                overlays = np.stack([
+                    self.shares.residual_overlay(startable[i][1])
+                    for i in rows])
+                got = self.policy.plan_batch(overlays, startable[rows[0]][2])
+                for i, plan in zip(rows, got):
+                    plans[i] = plan
             num_deferred = 0
-            for (q, ids), plan in zip(startable, plans):
+            for (q, ids, params_eff), plan in zip(startable, plans):
                 if not math.isfinite(plan.time):
                     self.cluster.abort_repair(q.node)   # back to FAILED
                     deferred.append(q)
@@ -315,10 +489,19 @@ class FleetSimulator:
                     bank = dict(q.bank)
                 else:
                     links, bank = flows, {}
+                # the ETA this plan promises under the believed capacities
+                # at its own admission instant — the realized duration is
+                # measured against it (plan-error distribution)
+                predicted = self.shares.admission_time(links)
                 self.shares.acquire(links)
+                if len(ids) - 1 < self.params.d:
+                    self.metrics.on_degraded_admission()
                 self.active.append(ActiveRepair(
                     node=q.node, plan=plan, ids=list(ids), links=links,
-                    fail_time=q.fail_time, start_time=self.now, bank=bank))
+                    fail_time=q.fail_time, start_time=self.now, bank=bank,
+                    plan_t0=self.now, predicted=predicted,
+                    retries=q.retries, next_check=q.next_check,
+                    avoid=q.avoid))
             if not num_deferred:
                 break
         if deferred:
@@ -340,26 +523,153 @@ class FleetSimulator:
         successors are judged under (we recompute between accepts), but the
         overlays the policy planned against are not re-stacked.
         """
-        overlays = np.stack([
-            self.shares.residual_overlay(
-                r.ids, exclude=frozenset(l for l, _ in r.links))
-            for r in self.active])
-        proposals = self.policy.replan(overlays, self.params)
-        for r, plan in zip(list(self.active), proposals):
-            if plan is None or not math.isfinite(plan.time):
+        groups: Dict[int, List[ActiveRepair]] = {}
+        for r in self.active:
+            groups.setdefault(len(r.ids) - 1, []).append(r)
+        for d_eff in sorted(groups):
+            params_eff = (self.params if d_eff == self.params.d else
+                          dataclasses.replace(self.params, d=d_eff))
+            group = groups[d_eff]
+            overlays = np.stack([
+                self.shares.residual_overlay(
+                    r.ids, exclude=frozenset(l for l, _ in r.links))
+                for r in group])
+            proposals = self.policy.replan(overlays, params_eff)
+            for r, plan in zip(group, proposals):
+                if plan is None or not math.isfinite(plan.time):
+                    continue
+                bank = r.banked_now()
+                links, credited, total = apply_credit(
+                    plan_links(plan, r.ids), bank)
+                occupied = frozenset(l for l, _ in r.links)
+                eta_new = self.shares.admission_time(links, exclude=occupied)
+                if eta_new >= r.eta():
+                    continue
+                self.shares.release(r.links)
+                r.rebase(plan, links, bank)
+                self.shares.acquire(r.links)
+                r.plan_t0 = self.now
+                r.predicted = eta_new
+                self.metrics.on_migration(credited, total)
+                self.shares.recompute(self.active)
+
+    # -- watchdog: plan-vs-reality mitigation -------------------------------
+
+    def _watchdog(self) -> None:
+        """Flag every in-flight repair whose realized progress trails its
+        plan-predicted trajectory by more than ``watchdog_lag``x — or whose
+        ETA is outright infinite (a stall; the ratio test alone would never
+        flag a 90%-done repair whose last link browned out to zero) — and
+        escalate mitigation.  Repairs inside their backoff window
+        (``next_check``) are skipped, including given-up ones
+        (``next_check == inf``)."""
+        sc = self.scenario
+        for r in list(self.active):
+            if self.now < r.next_check:
                 continue
-            bank = r.banked_now()
-            links, credited, total = apply_credit(
-                plan_links(plan, r.ids), bank)
-            occupied = frozenset(l for l, _ in r.links)
-            eta_new = self.shares.admission_time(links, exclude=occupied)
-            if eta_new >= r.eta():
+            elapsed = self.now - r.plan_t0
+            if elapsed <= 0.0:
                 continue
-            self.shares.release(r.links)
-            r.rebase(plan, links, bank)
-            self.shares.acquire(r.links)
-            self.metrics.on_migration(credited, total)
-            self.shares.recompute(self.active)
+            stalled = not math.isfinite(r.eta())
+            done = 1.0 - r.remaining
+            expected = (min(1.0, elapsed / r.predicted)
+                        if math.isfinite(r.predicted) and r.predicted > 0
+                        else 0.0)
+            if stalled or done * sc.watchdog_lag < expected:
+                self.metrics.on_watchdog_flag()
+                self._mitigate(r)
+        self.events.push(Event(self.now + sc.watchdog_period, WATCHDOG))
+
+    def _mitigate(self, r: ActiveRepair) -> None:
+        """Escalating mitigation ladder for a flagged repair.
+
+        Attempt 0 is a credited in-place replan over the current believed
+        capacities; attempts 1..``watchdog_retries`` evict the straggling
+        provider and retry with a fresh helper (so the budget buys one
+        rescue replan plus ``watchdog_retries`` evictions).  Each attempt
+        pushes the next check out by ``watchdog_period * backoff^attempt``;
+        past the budget the repair is left to limp along at whatever rate
+        it gets, and further flags are suppressed (``next_check = inf``).
+        The attempt counter lives on the repair and survives eviction
+        requeues, so a chronically lagging slot cannot reset its own
+        budget by being mitigated."""
+        sc = self.scenario
+        attempt = r.retries
+        if attempt > sc.watchdog_retries:
+            self.metrics.on_watchdog_giveup()
+            r.next_check = math.inf
+            return
+        r.retries = attempt + 1
+        r.next_check = (self.now
+                        + sc.watchdog_period * sc.watchdog_backoff ** attempt)
+        if attempt == 0:
+            self._watchdog_replan(r)
+        else:
+            self._evict_straggler(r)
+
+    def _watchdog_replan(self, r: ActiveRepair) -> None:
+        """Rescue attempt 0: a single-row ``policy.replan`` over the
+        repair's self-excluded believed overlay, accepted only if the
+        banked-credited ETA beats the current one.  Unlike opportunistic
+        migration this runs even with ``Scenario.migration`` off — it is a
+        targeted rescue.  Note both ETAs are believed-view predictions: a
+        replan can be accepted and still be stalled in reality (the
+        believed map does not know about the brownout), in which case the
+        next flag escalates to eviction."""
+        d_eff = len(r.ids) - 1
+        params_eff = (self.params if d_eff == self.params.d else
+                      dataclasses.replace(self.params, d=d_eff))
+        occupied = frozenset(l for l, _ in r.links)
+        overlay = self.shares.residual_overlay(r.ids, exclude=occupied)
+        proposals = self.policy.replan(overlay[None, ...], params_eff)
+        plan = proposals[0] if proposals else None
+        if plan is None or not math.isfinite(plan.time):
+            return
+        bank = r.banked_now()
+        links, credited, total = apply_credit(plan_links(plan, r.ids), bank)
+        eta_new = self.shares.admission_time(links, exclude=occupied)
+        if eta_new >= r.eta():
+            return
+        self.shares.release(r.links)
+        r.rebase(plan, links, bank)
+        self.shares.acquire(r.links)
+        r.plan_t0 = self.now
+        r.predicted = eta_new
+        self.metrics.on_watchdog_replan(credited, total)
+        self.shares.recompute(self.active)
+
+    def _evict_straggler(self, r: ActiveRepair) -> None:
+        """Evict the provider feeding the repair's bottleneck link —
+        judged under *true* shares, because the watchdog observes achieved
+        rates, not the believed map — and requeue the slot with its banked
+        blocks, surviving providers, and an ``avoid`` entry so re-admission
+        draws a fresh helper.  Mirrors the provider-loss carryover abort:
+        blocks parked *at* the evicted provider leave the plan with it
+        (it is no longer part of the tree to relay them), blocks it already
+        sent have landed downstream and stay banked."""
+        worst_link, worst_t = None, -1.0
+        for link, f in r.links:
+            if link[0] == r.node:
+                continue                    # never evict the newcomer
+            s = self.shares.share(link)
+            t = f / s if s > 0.0 else math.inf
+            if worst_link is None or t > worst_t:
+                worst_link, worst_t = link, t
+        if worst_link is None:              # no evictable residual links
+            return
+        straggler = worst_link[0]
+        self.shares.release(r.links)
+        self.active.remove(r)
+        self.cluster.abort_repair(r.node)
+        bank = {link: b for link, b in r.banked_now().items()
+                if link[1] != straggler}
+        survivors = tuple(p for p in r.providers if p != straggler)
+        self.queue.append(QueuedRepair(
+            r.fail_time, r.node, bank, survivors,
+            avoid=r.avoid + (straggler,), retries=r.retries,
+            next_check=r.next_check))
+        self.queue.sort(key=lambda q: q.fail_time)
+        self.metrics.on_eviction()
 
     # -- main loop ----------------------------------------------------------
 
@@ -387,7 +697,8 @@ class FleetSimulator:
         r.remaining = 0.0
         self.shares.release(r.links)
         self.cluster.complete_repair(r.node)
-        self.metrics.on_complete(r.fail_time, r.start_time, self.now)
+        self.metrics.on_complete(r.fail_time, r.start_time, self.now,
+                                 r.plan_t0, r.predicted)
         # the healthy population grew: re-draw the aggregate failure clock
         # (memorylessness makes the re-draw exact, same as on failures)
         self.next_fail = self._draw_next_fail()
@@ -401,15 +712,17 @@ class FleetSimulator:
         while True:
             t_comp, ci = self._next_completion()
             t_exo = self.events.peek_time()
-            t_next = min(t_comp, t_exo, self.next_fail)
+            t_next = min(t_comp, t_exo, self.next_fail, self.next_degrade)
             if t_next > end or not math.isfinite(t_next):
                 self._advance(end)
                 break
             self._advance(t_next)
-            # fixed same-time precedence: completion, heap, Poisson clock
-            if t_comp <= t_exo and t_comp <= self.next_fail:
+            # fixed same-time precedence: completion, heap, Poisson failure
+            # clock, Poisson degrade clock
+            if (t_comp <= t_exo and t_comp <= self.next_fail
+                    and t_comp <= self.next_degrade):
                 self._complete(ci)
-            elif t_exo <= self.next_fail:
+            elif t_exo <= self.next_fail and t_exo <= self.next_degrade:
                 ev = self.events.pop()
                 if ev.kind == FAILURE:
                     if self._apply_failure(ev.payload[0]):
@@ -424,8 +737,26 @@ class FleetSimulator:
                     self._read_arrival()
                 elif ev.kind == READ_DEPARTURE:
                     self._read_departure(ev.payload[0])
-            else:
+                elif ev.kind == DEGRADE:
+                    self._apply_degrade(*ev.payload)
+                elif ev.kind == RECOVER:
+                    self._recover(*ev.payload)
+                elif ev.kind == ESTIMATE_REFRESH:
+                    self._refresh_estimates()
+                    self.events.push(Event(
+                        self.now + self.scenario.estimate_refresh_period,
+                        ESTIMATE_REFRESH))
+                elif ev.kind == WATCHDOG:
+                    self._watchdog()
+            elif self.next_fail <= self.next_degrade:
                 self._poisson_failure()
+            else:
+                self._poisson_degrade()
+            if (self._estimates_on
+                    and self.scenario.estimate_refresh_period == 0):
+                # period 0 = perfectly fresh (but still noisy) estimates:
+                # re-snapshot every epoch so the noise alone is the error
+                self._refresh_estimates()
             if self._replan_pending:
                 self._replan_pending = False
                 if self.scenario.migration and self.active:

@@ -595,6 +595,11 @@ def test_default_path_matches_golden_quick_rows():
     for name, expect in golden["configs"].items():
         sc, pol = sweep[name]
         assert not (sc.carryover or sc.migration), name
+        # the robustness layer (ISSUE 6) must be fully inert on these rows
+        assert sc.estimate_noise == 0.0, name
+        assert sc.estimate_refresh_period == 0.0, name
+        assert sc.degrade_rate == 0.0 and sc.degradations == (), name
+        assert sc.watchdog_period == 0.0 and not sc.degraded_d, name
         got = simulate(sc, make_policy(pol), fs._params(),
                        seed=fs._config_seed(golden["root_seed"], name))
         assert got == expect, name

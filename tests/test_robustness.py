@@ -1,0 +1,474 @@
+"""Plan-vs-reality robustness validated against closed forms (ISSUE 6).
+
+* believed/true capacity split — predictions read the believed matrix and
+  skip brownout multipliers, actual flow rates do the opposite;
+* estimate staleness — a stale believed snapshot yields a closed-form
+  plan-error sample, and the next refresh (which measures achieved rates,
+  brownouts included) drives it back to zero;
+* straggler/stall injection — deterministic brownouts slow a repair by the
+  exact piecewise amount, a re-degrade supersedes the stale recovery via
+  the generation counter, and the Poisson degrade clock never perturbs the
+  other rng streams;
+* watchdog mitigation ladder — lag-ratio flag then credited in-place
+  replan (closed-form rescue at a capacity shock the frozen plan would
+  crawl through), stall flag then eviction of the straggling provider with
+  banked blocks carried over, and retry-budget exhaustion (give-up) when
+  the only possible helper is the stalled one;
+* graceful degradation — repairs admitted with d' in [k, d) helpers when
+  fewer than d are healthy, instead of queueing forever;
+* the drain-queue rollback regression (a provider-picker error mid-batch
+  must not wedge slots in REPAIRING) and Scenario validation messages;
+* the seeded stragglers acceptance: mitigation ON strictly improves mean
+  backlog AND the p99 vulnerability window at the same seed.
+
+The progress-vector conservation invariant (banked + outstanding == plan
+total, PR 3) is asserted at every epoch of every closed-form simulation
+here via ``_CheckedSim`` — eviction, watchdog replan, and degraded-d
+re-admission all move banked work around and must not create or destroy
+any.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (CodeParams, OverlayNetwork, RepairPlan, plan_time,
+                        tree_flows)
+from repro.fleet import (FleetSimulator, FlexiblePolicy, LinkShareModel,
+                         RepairPolicy, Scenario, mitigated, simulate,
+                         stragglers)
+from repro.fleet.cluster import FAILED, REPAIRING
+from repro.fleet.sim import QueuedRepair
+
+PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+CRAFT_PARAMS = CodeParams(n=6, k=2, d=2, M=2.0, alpha=1.0)
+
+
+class CraftedRelayPolicy(RepairPolicy):
+    """Fixed relay tree 1 -> 2 -> newcomer with unit betas: flow 1.0 on
+    overlay edges (1, 2) and (2, 0), total 2.0 blocks per plan."""
+
+    name = "crafted"
+
+    def plan_batch(self, caps, params):
+        plans = []
+        for c in caps:
+            parent = {1: 2, 2: 0}
+            betas = [1.0, 1.0]
+            flows = tree_flows(parent, betas, params.alpha)
+            net = OverlayNetwork(c.tolist())
+            plan = RepairPlan("crafted", params, parent, betas, flows, 0.0)
+            plan.time = plan_time(plan, net)
+            plans.append(plan)
+        return plans
+
+
+class CraftedBestOfPolicy(RepairPolicy):
+    """Pick the faster of {relay 1 -> 2 -> 0, star} under the given caps."""
+
+    name = "crafted_best"
+
+    def plan_batch(self, caps, params):
+        plans = []
+        for c in caps:
+            net = OverlayNetwork(c.tolist())
+            cands = []
+            for parent in ({1: 2, 2: 0}, {1: 0, 2: 0}):
+                betas = [1.0, 1.0]
+                flows = tree_flows(parent, betas, params.alpha)
+                p = RepairPlan("crafted", params, parent, betas, flows, 0.0)
+                p.time = plan_time(p, net)
+                cands.append(p)
+            plans.append(min(cands, key=lambda p: p.time))
+        return plans
+
+
+class _CheckedSim(FleetSimulator):
+    """FleetSimulator asserting the progress-vector conservation invariant
+    (banked + outstanding == plan total per current-plan edge) at every
+    event epoch — across evictions, watchdog replans, and degraded-d
+    re-admissions, credit transfer must neither create nor destroy work."""
+
+    checks = 0
+
+    def _advance(self, t):
+        super()._advance(t)
+        for r in self.active:
+            for link, (banked, todo, total) in r.work_accounting().items():
+                assert banked >= -1e-9 and todo >= -1e-9, (link, banked,
+                                                           todo)
+                assert abs(banked + todo - total) <= 1e-9 * max(1.0, total)
+            _CheckedSim.checks += 1
+
+
+def _flat_caps(n, c=10.0):
+    caps = np.full((n, n), c)
+    np.fill_diagonal(caps, 0.0)
+    return caps, (lambda rng, m: caps.copy())
+
+
+def _shared_pair_picker(failed, healthy, rng):
+    return [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Believed vs true capacities in the share model
+# ---------------------------------------------------------------------------
+
+def test_share_model_splits_believed_and_true_views():
+    caps = np.array([[0.0, 10.0], [10.0, 0.0]])
+    believed = np.array([[0.0, 4.0], [4.0, 0.0]])
+    m = LinkShareModel(caps, believed=believed)
+    m.out_mult = np.array([0.5, 1.0])
+    # actual rates: true caps x the source node's brownout multiplier
+    assert m.true_cap((0, 1)) == pytest.approx(5.0)
+    assert m.share((0, 1)) == pytest.approx(5.0)
+    assert m.nominal_time([((0, 1), 1.0)]) == pytest.approx(0.2)
+    # predictions: the believed matrix, blind to the brownout
+    assert m.believed_cap((0, 1)) == pytest.approx(4.0)
+    assert m.residual((0, 1)) == pytest.approx(4.0)
+    assert m.admission_time([((0, 1), 1.0)]) == pytest.approx(0.25)
+    assert m.residual_overlay([0, 1])[0, 1] == pytest.approx(4.0)
+    # both views fall back to the true matrix when the machinery is off
+    off = LinkShareModel(caps)
+    assert off.true_cap((0, 1)) == off.believed_cap((0, 1)) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Straggler/stall injection: closed-form slowdown and recovery
+# ---------------------------------------------------------------------------
+
+def test_degrade_and_recover_closed_form():
+    """All links 10 b/s; the relay plan (4 -> 5 -> 0, 1 block per edge)
+    solo takes 0.1 s.  Node 5's outgoing rates are halved on [0, 0.15]:
+    the (5, 0) edge runs at 5 b/s, so at recovery the repair is 75% done
+    (0.15 of a 0.2 s nominal) and the remaining 25% takes 0.025 s at full
+    rate — completion at exactly 0.175 s."""
+    _, model = _flat_caps(6)
+    sc = Scenario(num_nodes=6, duration=10.0, failure_rate=0.0,
+                  failures=((0.0, 0),), capacity_model=model,
+                  provider_picker=_shared_pair_picker,
+                  degradations=((0.0, 5, 0.5, 0.15),))
+    m = _CheckedSim(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m.completed == 1 and m.aborted == 0
+    assert m.degrade_events == 1
+    assert m.regen_times[0] == pytest.approx(0.175, abs=1e-12)
+    # the stale-monitoring plan promised 0.1 s; reality took 0.175
+    assert m.plan_errors[0] == pytest.approx(0.75, abs=1e-9)
+
+
+def test_redegrade_supersedes_stale_recovery():
+    """A second brownout before the first one's recovery must win: the
+    RECOVER event of generation 1 fires mid-generation-2 and is a no-op.
+    Rates: 5 b/s on [0, 0.05] (factor 0.5), then 2.5 b/s (factor 0.25)
+    until far past completion.  Work done at 0.05 is 25% of the 0.2 s
+    nominal; the remaining 75% of the 0.4 s nominal takes 0.3 s —
+    completion at 0.35 s.  (A wrongly-applied stale recovery would finish
+    at 0.1625 s.)"""
+    _, model = _flat_caps(6)
+    sc = Scenario(num_nodes=6, duration=10.0, failure_rate=0.0,
+                  failures=((0.0, 0),), capacity_model=model,
+                  provider_picker=_shared_pair_picker,
+                  degradations=((0.0, 5, 0.5, 0.1),
+                                (0.05, 5, 0.25, 1000.0)))
+    m = _CheckedSim(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m.completed == 1 and m.degrade_events == 2
+    assert m.regen_times[0] == pytest.approx(0.35, abs=1e-12)
+
+
+def test_degrade_stream_independent_of_dynamics():
+    """The Poisson degrade clock runs over all n slots at a constant rate,
+    so the brownout sample path is identical whether or not the mitigation
+    machinery reshapes the rest of the run — seeded A/B comparisons see
+    the same faults."""
+    sc = stragglers(16, duration=2000.0)
+    a = simulate(sc, FlexiblePolicy(), PARAMS, seed=7)
+    b = simulate(mitigated(sc), FlexiblePolicy(), PARAMS, seed=7)
+    assert a["degrade_events"] == b["degrade_events"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Estimate error: stale believed snapshots and the plan-error metric
+# ---------------------------------------------------------------------------
+
+def test_stale_estimates_closed_form_plan_error():
+    """Node 5 browns out (factor 0.5) right after the believed snapshot at
+    t=0: the first repair is planned and ETA'd against the stale matrix
+    (predicted 0.1 s) but flows at true rates (realized 0.2 s) — plan
+    error exactly +1.0.  The refresh at t=0.25 measures achieved rates
+    (brownout included), so the second repair at t=0.3 is predicted at
+    0.2 s and realizes 0.2 s — plan error exactly 0.0."""
+    _, model = _flat_caps(6)
+    sc = Scenario(num_nodes=6, duration=2.0, failure_rate=0.0,
+                  failures=((0.0, 0), (0.3, 1)), capacity_model=model,
+                  provider_picker=_shared_pair_picker,
+                  degradations=((0.0, 5, 0.5, 1000.0),),
+                  estimate_refresh_period=0.25)
+    m = _CheckedSim(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m.completed == 2
+    assert sorted(m.regen_times) == [pytest.approx(0.2, abs=1e-12)] * 2
+    assert m.plan_errors == [pytest.approx(1.0, abs=1e-9),
+                             pytest.approx(0.0, abs=1e-9)]
+    s = m.summary()
+    assert s["plan_err_mean"] == pytest.approx(0.5, abs=1e-9)
+    assert s["plan_err_p50"] == pytest.approx(0.5, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: lag flag -> credited in-place replan (closed form at a shock)
+# ---------------------------------------------------------------------------
+
+class _OneShockSim(_CheckedSim):
+    """Deterministic shock at the first CAPACITY_SHOCK event: the relay
+    link (4, 5) collapses and the direct link (4, 0) opens up."""
+
+    def _capacity_shock(self):
+        self.cluster.caps[4, 5] = 0.01
+        self.cluster.caps[4, 0] = 100.0
+        self._replan_pending = True
+
+
+def test_watchdog_replan_rescues_lagging_repair():
+    """Migration is OFF, so after the shock at t=0.005 guts (4, 5) the
+    half-done relay plan would crawl its remaining 0.5 blocks at 0.01 b/s
+    for ~50 s (pinned by the migration test in test_fleet.py).  The
+    watchdog tick at t=0.01 sees progress ~0.5 of the predicted 1.0
+    (lag 1.5 flags it), and its rescue replan — planned against the
+    refreshed believed matrix — moves to the now-open star, credits the
+    ~0.5 blocks banked on (5, 0), and finishes at t=0.02."""
+    n = 6
+    caps = np.full((n, n), 100.0)
+    np.fill_diagonal(caps, 0.0)
+    caps[4, 0] = 0.1                    # direct path closed pre-shock
+    model = (lambda rng, m: caps.copy())
+    sc = Scenario(num_nodes=n, duration=0.1, failure_rate=0.0,
+                  failures=((0.0, 0),), capacity_model=model,
+                  provider_picker=_shared_pair_picker,
+                  shock_period=0.005, carryover=True,
+                  estimate_refresh_period=0.002,
+                  watchdog_period=0.01, watchdog_lag=1.5)
+    m = _OneShockSim(sc, CraftedBestOfPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m.completed == 1 and m.aborted == 0
+    assert m.watchdog_flags == 1 and m.watchdog_replans == 1
+    assert m.evictions == 0 and m.watchdog_giveups == 0
+    assert m.vulnerability_windows[0] == pytest.approx(0.02, rel=1e-9)
+    # ~0.5 blocks banked on (5, 0) credited against the 2-block star plan
+    assert m.work_saved == pytest.approx(0.50005, rel=1e-9)
+    # the rescue segment's own prediction was accurate
+    assert m.plan_errors[0] == pytest.approx(0.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: stall flag -> eviction of the straggling provider
+# ---------------------------------------------------------------------------
+
+class _OrderedPickSim(_CheckedSim):
+    """Deterministic provider choice honoring survivors and avoid, so the
+    eviction -> fresh-helper path has a closed form."""
+
+    def _pick_providers(self, failed, healthy, survivors=(), d=None,
+                        avoid=()):
+        d = d or self.params.d
+        pool = [h for h in healthy if h != failed and h not in avoid]
+        keep = [s for s in survivors if s in pool]
+        return (keep + [h for h in pool if h not in keep])[:d]
+
+
+def test_watchdog_evicts_stalled_provider_and_retries():
+    """Node 1 stalls outright (factor 0) before the repair 1 -> 2 -> 0
+    starts; the believed view never learns (estimates off), so the rescue
+    replan at the first flag (t=0.05) is accepted but equally stalled.
+    The second flag (t=0.1, after 1x backoff) escalates: provider 1 — the
+    source of the infinite-residual bottleneck link — is evicted, and
+    re-admission draws the fresh helper 3, finishing 0.1 s later.  The
+    believed-ETA prediction of the final segment is exact."""
+    _, model = _flat_caps(4)
+    sc = Scenario(num_nodes=4, duration=1.0, failure_rate=0.0,
+                  failures=((0.0, 0),), capacity_model=model,
+                  degradations=((0.0, 1, 0.0, 1000.0),),
+                  watchdog_period=0.05)
+    sim = _OrderedPickSim(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0)
+    m = sim.run()
+    assert m.completed == 1
+    assert m.watchdog_flags == 2
+    assert m.watchdog_replans == 1          # accepted but useless
+    assert m.evictions == 1 and m.watchdog_giveups == 0
+    assert m.aborted == 0                   # evictions are not aborts
+    assert m.vulnerability_windows[0] == pytest.approx(0.2, abs=1e-12)
+    assert m.plan_errors[0] == pytest.approx(0.0, abs=1e-9)
+    assert sim.shares.users == {}           # everything released
+
+
+def test_watchdog_gives_up_when_no_alternative_helper():
+    """n=3 leaves exactly two possible providers, one of them stalled
+    forever: every eviction redraws the same stalled helper (the avoid
+    list is best-effort by design — starving the repair would be worse).
+    The mitigation ladder runs 1 replan + watchdog_retries evictions with
+    exponential backoff (flags at 0.05, 0.1, 0.2, 0.4), then the flag at
+    0.8 exhausts the budget: give-up, and no further flags ever."""
+    _, model = _flat_caps(3)
+    sc = Scenario(num_nodes=3, duration=5.0, failure_rate=0.0,
+                  failures=((0.0, 0),), capacity_model=model,
+                  degradations=((0.0, 1, 0.0, 1000.0),),
+                  watchdog_period=0.05, watchdog_retries=3,
+                  watchdog_backoff=2.0)
+    m = _CheckedSim(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0).run()
+    assert m.completed == 0                 # the stall never clears
+    assert m.watchdog_flags == 5            # 1 replan + 3 evicts + give-up
+    assert m.watchdog_replans == 1
+    assert m.evictions == 3
+    assert m.watchdog_giveups == 1
+    assert m.aborted == 0
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: functional repair with d' in [k, d) helpers
+# ---------------------------------------------------------------------------
+
+def test_degraded_d_admission_when_helpers_scarce():
+    """Three simultaneous failures leave 5 healthy nodes in an 8-slot
+    cluster — below d=6 but above k=3.  Without degraded_d every repair
+    queues until the population recovers (which never happens with the
+    failure process off); with it, all three are admitted with d'=5
+    helpers and complete."""
+    caps = np.random.default_rng(2).uniform(10.0, 120.0, size=(8, 8))
+    np.fill_diagonal(caps, 0.0)
+    model = (lambda rng, m: caps.copy())
+    base = dict(num_nodes=8, duration=200.0, failure_rate=0.0,
+                failures=((0.0, 0), (0.0, 1), (0.0, 2)),
+                capacity_model=model)
+    stuck = simulate(Scenario(**base), FlexiblePolicy(), PARAMS, seed=0)
+    assert stuck["completed"] == 0 and stuck["degraded_admissions"] == 0
+    _CheckedSim.checks = 0
+    m = _CheckedSim(Scenario(degraded_d=True, **base), FlexiblePolicy(),
+                    PARAMS, seed=0).run()
+    assert m.completed == 3
+    assert m.degraded_admissions == 3
+    assert _CheckedSim.checks > 0
+
+
+# ---------------------------------------------------------------------------
+# Drain-queue rollback: a provider-picker error must not wedge the cluster
+# ---------------------------------------------------------------------------
+
+def _picky_picker(failed, healthy, rng):
+    if failed == 1:
+        raise ValueError("picker deliberately failing for slot 1")
+    return [4, 5]
+
+
+def _dup_picker(failed, healthy, rng):
+    return [4, 4]
+
+
+@pytest.mark.parametrize("picker,match", [
+    (_picky_picker, "deliberately failing"),
+    (_dup_picker, "distinct providers"),
+])
+def test_drain_queue_rolls_back_on_picker_error(picker, match):
+    """A picker error mid-batch must roll back every slot the batch
+    already flipped to REPAIRING and restore the queue in order — not
+    leave slots wedged in REPAIRING with no active repair that could ever
+    complete them.  ``_picky_picker`` raises on the second slot of the
+    batch (exercising multi-slot rollback); ``_dup_picker`` trips the
+    distinct-providers check on the first."""
+    _, model = _flat_caps(6)
+    sc = Scenario(num_nodes=6, duration=10.0, failure_rate=0.0,
+                  capacity_model=model, provider_picker=picker,
+                  max_concurrent=8)
+    sim = FleetSimulator(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=0)
+    for node in (0, 1):
+        sim.cluster.fail(node)
+        sim.queue.append(QueuedRepair(0.0, node))
+    with pytest.raises(ValueError, match=match):
+        sim._drain_queue()
+    # both slots are back to FAILED (not REPAIRING), requeued, no links held
+    assert sim.cluster.state[0] == FAILED
+    assert sim.cluster.state[1] == FAILED
+    assert REPAIRING not in sim.cluster.state
+    assert [q.node for q in sim.queue] == [0, 1]
+    assert sim.active == [] and sim.shares.users == {}
+
+
+def test_pick_providers_avoid_is_best_effort():
+    _, model = _flat_caps(8)
+    sc = Scenario(num_nodes=8, duration=1.0, capacity_model=model)
+    sim = FleetSimulator(sc, CraftedRelayPolicy(), CRAFT_PARAMS, seed=3)
+    healthy = list(range(1, 8))
+    # enough alternatives: the avoid list is honored
+    got = sim._pick_providers(0, healthy, d=2, avoid=(1, 2, 3, 4, 5))
+    assert sorted(got) == [6, 7]
+    # thin pool: avoiding would starve the repair, so avoid is dropped
+    got = sim._pick_providers(0, healthy, d=2, avoid=(1, 2, 3, 4, 5, 6))
+    assert len(set(got)) == 2 and all(h in healthy for h in got)
+
+
+# ---------------------------------------------------------------------------
+# Scenario validation (hardening satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(max_concurrent=0), "max_concurrent"),
+    (dict(rack_burst_prob=1.5), "rack_burst_prob"),
+    (dict(rack_size=4, rack_burst_extra=-1), "rack_burst_extra"),
+    (dict(read_fanin=-1), "read_fanin"),
+    (dict(estimate_noise=1.0), "estimate_noise"),
+    (dict(estimate_refresh_period=-1.0), "estimate_refresh_period"),
+    (dict(degrade_rate=-1e-3), "degrade_rate"),
+    (dict(degrade_rate=1e-3), "degrade_mean_duration"),
+    (dict(degrade_lo=0.5, degrade_hi=0.2), "degrade_lo"),
+    (dict(degrade_hi=1.0), "below 1"),
+    (dict(degradations=((-1.0, 0, 0.5, 1.0),)), "degradation injection"),
+    (dict(degradations=((1.0, 0, 1.5, 1.0),)), "degradation injection"),
+    (dict(watchdog_period=-1.0), "watchdog_period"),
+    (dict(watchdog_lag=0.5), "watchdog_lag"),
+    (dict(watchdog_retries=-1), "watchdog_retries"),
+    (dict(watchdog_backoff=0.5), "watchdog_backoff"),
+])
+def test_scenario_validation_messages(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        Scenario(num_nodes=8, duration=100.0, **kwargs)
+
+
+def test_scenario_robustness_defaults_are_inert():
+    sc = Scenario(num_nodes=8, duration=100.0)
+    assert sc.estimate_noise == 0.0 and sc.estimate_refresh_period == 0.0
+    assert sc.degrade_rate == 0.0 and sc.degradations == ()
+    assert sc.watchdog_period == 0.0 and not sc.degraded_d
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: mitigation strictly pays for itself on seeded stragglers
+# ---------------------------------------------------------------------------
+
+def test_mitigation_strictly_improves_seeded_stragglers():
+    """On the stragglers scenario (silent brownouts the abort path cannot
+    see), the watchdog + retry + degraded-d stack must STRICTLY improve
+    both mean backlog and the p99 vulnerability window at the same seed,
+    and must actually act (flags, evictions) rather than win by luck."""
+    sc = stragglers(16, duration=2000.0)
+    base = simulate(sc, FlexiblePolicy(), PARAMS, seed=7)
+    mit = simulate(mitigated(sc), FlexiblePolicy(), PARAMS, seed=7)
+    assert base["watchdog_flags"] == 0 and base["evictions"] == 0
+    assert mit["watchdog_flags"] > 0
+    assert mit["watchdog_replans"] + mit["evictions"] > 0
+    assert mit["mean_backlog"] < base["mean_backlog"]
+    assert mit["vulnerability_p99"] < base["vulnerability_p99"]
+    # mitigation also tightens the plan-error tail: rescued/evicted
+    # segments get re-predicted against fresher knowledge
+    assert mit["plan_err_p99"] < base["plan_err_p99"]
+
+
+def test_conservation_under_mitigation_stress():
+    """The PR-3 invariant holds through the full mitigation machinery on
+    a seeded brownout-heavy run: banked + outstanding == plan total at
+    every epoch, across watchdog replans and evictions."""
+    _CheckedSim.checks = 0
+    sc = mitigated(stragglers(12, duration=1500.0))
+    acted = 0
+    for seed in (0, 1):
+        m = _CheckedSim(sc, FlexiblePolicy(), PARAMS, seed=seed).run()
+        acted += m.watchdog_replans + m.evictions
+    assert _CheckedSim.checks > 200
+    assert acted > 0
