@@ -47,15 +47,20 @@ ROBUSTNESS_DEFAULTS = {
     "degradations": (),
     "watchdog_period": 0.0,
     "degraded_d": False,
+    "trace": False,
 }
 
 
 def main() -> int:
     import benchmarks.fleet_scale as fs
     from repro.fleet import make_policy, simulate
+    from repro.obs import json_sanitize
+
+    def _reject(const):  # the golden is strict JSON; Infinity/NaN is a bug
+        raise ValueError(f"non-strict JSON literal {const} in {GOLDEN}")
 
     with open(GOLDEN) as f:
-        golden = json.load(f)
+        golden = json.load(f, parse_constant=_reject)
     sweep = {name: (sc, pol) for name, sc, pol in fs._sweep(quick=True)}
     params = fs._params()
     problems = 0
@@ -70,8 +75,11 @@ def main() -> int:
                 print(f"FAIL: {name}: golden row has {knob}="
                       f"{getattr(sc, knob)!r}, want default {default!r}")
                 problems += 1
-        got = simulate(sc, make_policy(pol), params,
-                       seed=fs._config_seed(golden["root_seed"], name))
+        # sanitize like the writer does: the golden stores non-finite
+        # floats (quiet rows' mttdl_estimate) as null since schema v2
+        got = json_sanitize(simulate(
+            sc, make_policy(pol), params,
+            seed=fs._config_seed(golden["root_seed"], name)))
         for key in sorted(set(expect) | set(got)):
             if key not in expect:
                 print(f"FAIL: {name}.{key}: new summary key not in golden "

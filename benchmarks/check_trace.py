@@ -1,0 +1,173 @@
+"""CI guard for the fleet flight-recorder artifacts (ISSUE 7).
+
+Usage (after ``python -m benchmarks.fleet_scale --quick --seed 0 --trace``):
+
+    python benchmarks/check_trace.py
+
+For every ``<name>.jsonl`` / ``<name>.trace.json`` pair under
+``benchmarks/artifacts/traces/`` this checks:
+
+* both files are *strict* JSON (no ``Infinity``/``NaN`` literals — the
+  parser rejects them explicitly);
+* the JSONL header carries the expected ``schema_version`` and ``kind``,
+  and every following line parses as one event with a ``t``/``ev`` pair;
+* the Chrome trace has well-formed ``traceEvents`` (every event carries
+  ``ph``/``pid``/``ts``; begin/end spans are balanced per (cat, id));
+* the span-count contract: finished ``transfer`` spans (reason complete or
+  abort) equal ``completed + aborted`` from the recorder's embedded
+  summary — every repair the metrics counted left a matching span;
+* link-time conservation: integrated per-link user-seconds are at least
+  ``completed * regen_mean`` (each active repair holds >= 1 link for its
+  whole transfer window, so total link occupancy bounds total repair time
+  from above);
+* where a config name also appears in the quick golden
+  (``benchmarks/golden/fleet_quick_seed0.json``), the recorder's embedded
+  summary equals the golden row bitwise — the flight recorder observed the
+  *same* simulation the untraced default path pins.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACE_DIR = os.path.join(REPO_ROOT, "benchmarks", "artifacts", "traces")
+GOLDEN = os.path.join(REPO_ROOT, "benchmarks", "golden",
+                      "fleet_quick_seed0.json")
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+CHROME_REQUIRED = ("ph", "pid", "ts")
+
+
+def _strict_load(path: str):
+    def _reject(const):
+        raise ValueError(f"non-strict JSON literal {const} in {path}")
+
+    with open(path) as f:
+        return json.load(f, parse_constant=_reject)
+
+
+def _check_jsonl(path: str, problems: list):
+    from repro.obs import SCHEMA_VERSION, TRACE_KIND
+
+    def _reject(const):
+        raise ValueError(f"non-strict JSON literal {const} in {path}")
+
+    with open(path) as f:
+        lines = [json.loads(ln, parse_constant=_reject)
+                 for ln in f if ln.strip()]
+    if not lines:
+        problems.append(f"{path}: empty")
+        return None, []
+    header, events = lines[0], lines[1:]
+    if header.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"{path}: schema_version "
+                        f"{header.get('schema_version')!r}, "
+                        f"want {SCHEMA_VERSION}")
+    if header.get("kind") != TRACE_KIND:
+        problems.append(f"{path}: kind {header.get('kind')!r}, "
+                        f"want {TRACE_KIND!r}")
+    if header.get("events") != len(events):
+        problems.append(f"{path}: header says {header.get('events')} "
+                        f"events, file has {len(events)}")
+    for i, ev in enumerate(events):
+        if "t" not in ev or "ev" not in ev:
+            problems.append(f"{path}: line {i + 2} missing t/ev")
+            break
+    return header, events
+
+
+def _check_chrome(path: str, header: dict, problems: list) -> int:
+    """Validate the Chrome trace; return the finished-transfer span count."""
+    trace = _strict_load(path)
+    if "traceEvents" not in trace:
+        problems.append(f"{path}: no traceEvents")
+        return 0
+    open_spans = {}
+    finished_transfers = 0
+    for ev in trace["traceEvents"]:
+        for key in CHROME_REQUIRED:
+            if key not in ev:
+                problems.append(f"{path}: event missing {key!r}: {ev!r}")
+                return finished_transfers
+        if ev["ph"] == "b":
+            open_spans[(ev.get("cat"), ev.get("id"))] = ev
+        elif ev["ph"] == "e":
+            if open_spans.pop((ev.get("cat"), ev.get("id")), None) is None:
+                problems.append(f"{path}: end without begin: {ev!r}")
+            if (ev.get("cat") == "repair"
+                    and ev.get("args", {}).get("reason")
+                    in ("complete", "abort")):
+                finished_transfers += 1
+    if open_spans:
+        problems.append(f"{path}: {len(open_spans)} unclosed spans "
+                        f"(chrome_trace must close them at last_ts)")
+    return finished_transfers
+
+
+def main() -> int:
+    jsonl_paths = sorted(glob.glob(os.path.join(TRACE_DIR, "*.jsonl")))
+    if not jsonl_paths:
+        print(f"FAIL: no traces under {TRACE_DIR} "
+              f"(run benchmarks.fleet_scale with --trace first)")
+        return 1
+    golden_configs = {}
+    if os.path.exists(GOLDEN):
+        golden_configs = _strict_load(GOLDEN).get("configs", {})
+    problems: list = []
+    golden_hits = 0
+    for jsonl_path in jsonl_paths:
+        name = os.path.basename(jsonl_path)[:-len(".jsonl")]
+        header, events = _check_jsonl(jsonl_path, problems)
+        if header is None:
+            continue
+        meta = header.get("meta") or {}
+        summary = meta.get("summary") or {}
+        links = meta.get("links") or {}
+        chrome_path = os.path.join(TRACE_DIR, f"{name}.trace.json")
+        if not os.path.exists(chrome_path):
+            problems.append(f"{name}: missing {chrome_path}")
+            continue
+        finished = _check_chrome(chrome_path, header, problems)
+        # span-count contract (skip when the ring buffer dropped events:
+        # early begins may be gone, so the count is legitimately short)
+        want = summary.get("completed", 0) + summary.get("aborted", 0)
+        if header.get("dropped", 0) == 0 and finished != want:
+            problems.append(
+                f"{name}: {finished} finished transfer spans != "
+                f"completed+aborted = {want}")
+        # link-time conservation: every active repair occupies >= 1 link
+        # for its whole window, so summed user-seconds bound total repair
+        # seconds from above
+        total_user_seconds = links.get("total_user_seconds", 0.0)
+        lower = (summary.get("completed", 0)
+                 * summary.get("regen_mean", 0.0))
+        if total_user_seconds < lower * (1 - 1e-9):
+            problems.append(
+                f"{name}: link user-seconds {total_user_seconds:.3f} < "
+                f"completed*regen_mean {lower:.3f} (conservation violated)")
+        # the recorder's embedded summary must match the untraced golden
+        if name in golden_configs:
+            golden_hits += 1
+            expect = golden_configs[name]
+            for key in sorted(set(expect) | set(summary)):
+                if summary.get(key) != expect.get(key):
+                    problems.append(
+                        f"{name}.{key}: traced summary "
+                        f"{summary.get(key)!r} != golden "
+                        f"{expect.get(key)!r}")
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}")
+        print(f"trace guard: {len(problems)} problems across "
+              f"{len(jsonl_paths)} traces")
+        return 1
+    print(f"trace guard OK: {len(jsonl_paths)} traces valid "
+          f"({golden_hits} cross-checked against the fleet golden)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

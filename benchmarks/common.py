@@ -1,12 +1,45 @@
-"""Shared benchmark plumbing: rows, timing, artifact JSON."""
+"""Shared benchmark plumbing: rows, timing, artifact JSON, run metadata."""
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Version of the *envelope* of the root BENCH_*.json summaries (the
+# schema_version / meta header around the payload), bumped when a reader
+# of those files would need to change.  v2 = strict JSON (no Infinity/NaN
+# literals; non-finite floats serialize as null) + meta header.
+BENCH_SCHEMA_VERSION = 2
+
+
+def git_describe() -> Optional[str]:
+    """``git describe --always --dirty --tags`` of the repo, or None when
+    git is unavailable (e.g. an sdist run) — metadata only, never fatal."""
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty", "--tags"],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def run_meta(seed: int, **extra: Any) -> Dict[str, Any]:
+    """Self-description header for a benchmark summary: enough to say
+    *which* code produced it and under what knobs, without timestamps
+    (the summaries are bitwise-pinned by CI goldens)."""
+    meta: Dict[str, Any] = {
+        "seed": int(seed),
+        "quick": quick_mode(),
+        "git": git_describe(),
+    }
+    meta.update(extra)
+    return meta
 
 
 def save_artifact(name: str, data: Any) -> str:

@@ -29,8 +29,19 @@ estimates) scenarios with mitigation off and on (``..._robust``:
 watchdog + retry/backoff + degraded-d admission); each summary carries the
 plan-error distribution (realized vs predicted (re)plan ETA).
 
-CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N]`` (CI runs the
-``--quick`` smoke, which asserts the artifact exists and backlog is finite).
+Observability (ISSUE 7): ``--trace`` re-runs every configuration with the
+flight recorder on, asserts the traced summary is bitwise identical to the
+untraced one (tracing is observation, never perturbation), and writes one
+``<name>.jsonl`` event log plus one ``<name>.trace.json`` Chrome/Perfetto
+trace per config under ``benchmarks/artifacts/traces/``.  Both JSON roots
+are strict JSON since schema v2 — non-finite floats (the quiet scenarios'
+``mttdl_estimate``) serialize as ``null``, never the invalid ``Infinity``
+literal — and carry a ``schema_version`` + ``meta`` header (root seed,
+quick flag, git describe).
+
+CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N] [--trace]``
+(CI runs the ``--quick`` smoke, which asserts the artifact exists and
+backlog is finite, plus a ``--trace`` pass checked by check_trace.py).
 """
 from __future__ import annotations
 
@@ -42,11 +53,16 @@ import time
 import zlib
 
 from repro.core import CodeParams
-from repro.fleet import SCENARIOS, make_policy, mitigated, simulate
+from repro.fleet import SCENARIOS, FleetSimulator, make_policy, mitigated, \
+    simulate
+from repro.obs import json_sanitize
 
-from .common import quick_mode, row, save_artifact
+from .common import BENCH_SCHEMA_VERSION, quick_mode, row, run_meta, \
+    save_artifact
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts", "traces")
 
 # ~events per simulation: duration is sized as EVENT_BUDGET failures in
 # expectation, so sweeping the failure rate changes contention, not cost
@@ -114,17 +130,37 @@ def _sweep(quick: bool):
         yield f"{kind}_n{n}_flexible_robust", mitigated(sc), "flexible"
 
 
-def run(root_seed: int = 0):
+def _trace_config(name: str, sc, pol: str, params, seed: int,
+                  untraced_summary: dict, root_seed: int) -> None:
+    """Re-run one configuration with the flight recorder on, assert the
+    traced summary equals the untraced one bitwise (tracing must never
+    perturb the simulation), and write the JSONL + Chrome trace files."""
+    sim = FleetSimulator(dataclasses.replace(sc, trace=True),
+                         make_policy(pol), params, seed=seed)
+    traced = sim.run().summary()
+    assert traced == untraced_summary, \
+        f"{name}: traced summary diverged from untraced (tracing perturbed " \
+        f"the simulation)"
+    sim.recorder.meta.update(config=name, root_seed=root_seed, seed=seed)
+    os.makedirs(TRACE_DIR, exist_ok=True)
+    sim.recorder.save_jsonl(os.path.join(TRACE_DIR, f"{name}.jsonl"))
+    sim.recorder.save_chrome(os.path.join(TRACE_DIR,
+                                          f"{name}.trace.json"))
+
+
+def run(root_seed: int = 0, trace: bool = False):
     quick = quick_mode()
     params = _params()
     rows, configs = [], {}
     for name, sc, pol in _sweep(quick):
+        seed = _config_seed(root_seed, name)
         t0 = time.perf_counter()
-        summary = simulate(sc, make_policy(pol), params,
-                           seed=_config_seed(root_seed, name))
+        summary = simulate(sc, make_policy(pol), params, seed=seed)
         wall = time.perf_counter() - t0
         assert math.isfinite(summary["mean_backlog"]), name
         assert summary["regen_p50"] >= 0 and summary["regen_p99"] >= 0, name
+        if trace:
+            _trace_config(name, sc, pol, params, seed, summary, root_seed)
         configs[name] = summary
         events = max(summary["completed"] + summary["aborted"], 1)
         rows.append(row(
@@ -135,10 +171,19 @@ def run(root_seed: int = 0):
             f"mig={summary['migrations']:.0f} "
             f"saved={summary['work_saved_fraction']:.2f} "
             f"plan_err={summary['plan_err_mean']:.2f}"))
-    artifact = {"quick": quick, "root_seed": root_seed, "configs": configs}
+    artifact = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "meta": run_meta(root_seed, sweep="quick" if quick else "full"),
+        "quick": quick,
+        "root_seed": root_seed,
+        "configs": configs,
+    }
+    # strict JSON: `Infinity` is not JSON — sanitize non-finite floats
+    # (quiet scenarios' mttdl_estimate) to null and forbid the literal
+    artifact = json_sanitize(artifact)
     save_artifact("fleet_scale", artifact)
     with open(os.path.join(REPO_ROOT, "BENCH_fleet.json"), "w") as f:
-        json.dump(artifact, f, indent=2, sort_keys=True)
+        json.dump(artifact, f, indent=2, sort_keys=True, allow_nan=False)
     return rows
 
 
@@ -149,19 +194,31 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="small sweep (CI smoke)")
     ap.add_argument("--seed", type=int, default=0, help="root seed")
+    ap.add_argument("--trace", action="store_true",
+                    help="also re-run each config with the flight recorder "
+                         "on and write benchmarks/artifacts/traces/")
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
-    for r in run(root_seed=args.seed):
+    for r in run(root_seed=args.seed, trace=args.trace):
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     path = os.path.join(REPO_ROOT, "BENCH_fleet.json")
     assert os.path.exists(path), "BENCH_fleet.json was not written"
+
+    def _reject(const):  # strict JSON: Infinity/NaN literals are a bug
+        raise ValueError(f"non-strict JSON literal {const} in {path}")
+
     with open(path) as f:
-        data = json.load(f)
+        data = json.load(f, parse_constant=_reject)
+    assert data["schema_version"] == BENCH_SCHEMA_VERSION, "stale schema"
     assert all(math.isfinite(c["mean_backlog"])
                for c in data["configs"].values()), "non-finite backlog"
     print(f"# wrote {path} ({len(data['configs'])} configs)")
+    if args.trace:
+        n_traces = len([p for p in os.listdir(TRACE_DIR)
+                        if p.endswith(".jsonl")])
+        print(f"# wrote {n_traces} traces under {TRACE_DIR}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,11 @@ fig6/fig7/fig8 artifacts, and a ``plans`` section with the *deterministic*
 per-point plan values (norm_time / norm_traffic / time_s; no timings) that
 ``benchmarks/golden/planning_quick_seed0.json`` pins bitwise in CI — so
 both the perf trajectory and the planned values of the batched planning
-engine (repro.core.batched) are machine-trackable across PRs.
+engine (repro.core.batched) are machine-trackable across PRs.  Since
+schema v2 the summary also carries a ``profile`` section (per-stage
+planner wall times from ``repro.obs.PlannerProfile`` over a seeded
+interior-alpha batch, per batched scheme) and a ``schema_version`` +
+``meta`` header (seed, quick flag, git describe).
 
 Modules:
   fig6_d_sweep    — Fig. 6 (regeneration time & bandwidth vs d)
@@ -117,10 +121,46 @@ def _registry_info() -> dict:
             "batched": list(scheme_names(batched=True))}
 
 
+def _profile_section(quick: bool, seed: int) -> dict:
+    """Per-stage planner profile (ISSUE 7): run every batched scheme once
+    over a seeded interior-alpha batch with a ``repro.obs.PlannerProfile``
+    attached, and record stage wall times / counters.  The interior alpha
+    (halfway MSR -> MBR) is deliberate: it exercises fr's star_bisection +
+    witness stages and ftr's full candidate/local-search pipeline, which
+    the pure-MSR closed form would skip.  Wall times are machine noise by
+    nature; the golden guard only pins ``plans``, never this section."""
+    import numpy as np
+
+    from repro.core import CodeParams, mbr_point, plan_many, scheme_names
+    from repro.obs import PlannerProfile
+
+    B = 64 if quick else 256
+    M, k, d, n = 600.0, 3, 6, 12
+    a_msr = M / k
+    a_mbr, _ = mbr_point(M, k, d)
+    params = CodeParams(n=n, k=k, d=d, M=M, alpha=0.5 * (a_msr + a_mbr))
+    rng = np.random.default_rng([seed, 0x0B5])
+    caps = rng.uniform(10.0, 120.0, size=(B, d + 1, d + 1))
+    idx = np.arange(d + 1)
+    caps[:, idx, idx] = 0.0
+    out = {}
+    for scheme in scheme_names(batched=True):
+        prof = PlannerProfile()
+        plan_many(caps, params, scheme, engine="batched", profile=prof)
+        out[scheme] = prof.summary()
+    return out
+
+
 def _write_planning_summary(rows_by_module: dict) -> None:
+    from .common import BENCH_SCHEMA_VERSION, run_meta
+
+    quick = os.environ.get("BENCH_QUICK", "0") == "1"
+    seed = int(os.environ.get("BENCH_SEED", "0"))
     summary = {
-        "quick": os.environ.get("BENCH_QUICK", "0") == "1",
-        "seed": int(os.environ.get("BENCH_SEED", "0")),
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "meta": run_meta(seed),
+        "quick": quick,
+        "seed": seed,
         "registry": _registry_info(),
         "rows": {
             r["name"]: round(r["us_per_call"], 3)
@@ -130,10 +170,11 @@ def _write_planning_summary(rows_by_module: dict) -> None:
         "schemes": {s: {"plan_ms": round(ms, 4)}
                     for s, ms in _scheme_plan_ms(rows_by_module).items()},
         "plans": _plan_values(rows_by_module),
+        "profile": _profile_section(quick, seed),
     }
     path = os.path.join(REPO_ROOT, "BENCH_planning.json")
     with open(path, "w") as f:
-        json.dump(summary, f, indent=2, sort_keys=True)
+        json.dump(summary, f, indent=2, sort_keys=True, allow_nan=False)
 
 
 def _parse_args(argv=None) -> argparse.Namespace:

@@ -35,6 +35,7 @@ DeprecationWarning per name per process) so external code keeps working.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import warnings
 from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
@@ -73,14 +74,18 @@ class SchemeSpec:
     vectorized (the dispatcher then runs the declared scalar fallback).
     ``accepts_witness`` marks planners taking the ``witness=`` selector for
     the traffic-minimal witness engine (exact level cut vs scipy LP);
-    ``topology`` is ``"tree"`` for schemes that search regeneration trees
-    and ``"star"`` for direct-to-newcomer schemes.
+    ``accepts_profile`` marks *batched* planners taking the ``profile=``
+    hook (ISSUE 7: per-stage wall-time instrumentation, the
+    ``repro.obs.profile.PlannerProfile`` contract); ``topology`` is
+    ``"tree"`` for schemes that search regeneration trees and ``"star"``
+    for direct-to-newcomer schemes.
     """
 
     name: str
     scalar: ScalarPlanner
     batched: Optional[BatchedPlanner] = None
     accepts_witness: bool = False
+    accepts_profile: bool = False
     topology: str = "star"
     description: str = ""
 
@@ -99,7 +104,8 @@ _REGISTRY: Dict[str, SchemeSpec] = {}
 
 def register_scheme(name: str, scalar: Optional[ScalarPlanner] = None, *,
                     batched: Optional[BatchedPlanner] = None,
-                    accepts_witness: bool = False, topology: str = "star",
+                    accepts_witness: bool = False,
+                    accepts_profile: bool = False, topology: str = "star",
                     description: str = "", replace: bool = False):
     """Register a scheme; usable directly or as a decorator.
 
@@ -121,8 +127,9 @@ def register_scheme(name: str, scalar: Optional[ScalarPlanner] = None, *,
             raise ValueError(f"scheme {name!r} is already registered; "
                              f"pass replace=True to overwrite")
         spec = SchemeSpec(name=name, scalar=fn, batched=batched,
-                          accepts_witness=accepts_witness, topology=topology,
-                          description=description)
+                          accepts_witness=accepts_witness,
+                          accepts_profile=accepts_profile,
+                          topology=topology, description=description)
         _REGISTRY[name] = spec
         return spec
 
@@ -197,6 +204,16 @@ def _planner_kwargs(spec: SchemeSpec, witness: str, kwargs: dict) -> dict:
     return kw
 
 
+def _pstage(profile, name: str):
+    """Stage-timing context: ``profile`` is any PlannerProfile-shaped
+    object (``stage``/``count``/``note``, see ``repro.obs.profile`` — the
+    contract is duck-typed so the planning core stays import-free of the
+    observability package), or None for the zero-overhead default."""
+    if profile is None:
+        return contextlib.nullcontext()
+    return profile.stage(name)
+
+
 def _check_engine(engine: str) -> None:
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of "
@@ -205,7 +222,7 @@ def _check_engine(engine: str) -> None:
 
 def plan(net: OverlayNetwork, params: CodeParams, scheme: str,
          engine: str = "auto", witness: str = "exact",
-         **kwargs) -> RepairPlan:
+         profile=None, **kwargs) -> RepairPlan:
     """Plan one regeneration of ``net`` with ``scheme``.
 
     ``engine="auto"`` (default) runs the scalar planner — the correctness
@@ -214,8 +231,12 @@ def plan(net: OverlayNetwork, params: CodeParams, scheme: str,
     scalar, with a once-per-scheme RuntimeWarning, when the registry
     declares no batched planner).  ``witness`` selects the traffic-minimal
     witness engine and reaches exactly the schemes that declared
-    ``accepts_witness``; extra ``**kwargs`` (e.g. ``beta_max=`` for shah,
-    ``region=`` for fr/ftr) are forwarded verbatim.
+    ``accepts_witness``; ``profile`` (optional, a
+    ``repro.obs.profile.PlannerProfile``-shaped object) records the call
+    shape and wall time — planners that declared ``accepts_profile``
+    additionally time their internal stages; extra ``**kwargs`` (e.g.
+    ``beta_max=`` for shah, ``region=`` for fr/ftr) are forwarded
+    verbatim.  Profiling never changes what is planned.
     """
     _check_engine(engine)
     spec = get_scheme(scheme)
@@ -223,15 +244,23 @@ def plan(net: OverlayNetwork, params: CodeParams, scheme: str,
     if engine == "batched" and spec.batched is None:
         _warn_scalar_fallback(scheme, "plan")
         engine = "scalar"
+    if profile is not None:
+        profile.note(scheme=spec.name, batch=1,
+                     engine="batched" if engine == "batched" else "scalar")
     if engine == "batched":
-        res = spec.batched(caps_tensor([net]), params, **kw)
+        if spec.accepts_profile and profile is not None:
+            kw["profile"] = profile
+        with _pstage(profile, "total"):
+            res = spec.batched(caps_tensor([net]), params, **kw)
         return plans_from_batch(res, params)[0]
-    return spec.scalar(net, params, **kw)
+    with _pstage(profile, "total"):
+        return spec.scalar(net, params, **kw)
 
 
 def plan_many(nets: Union[np.ndarray, Sequence[OverlayNetwork]],
               params: CodeParams, scheme: str, engine: str = "auto",
-              witness: str = "exact", **kwargs) -> BatchPlanResult:
+              witness: str = "exact", profile=None,
+              **kwargs) -> BatchPlanResult:
     """Plan one scheme across a batch of networks.
 
     ``nets`` is either a ``(B, d+1, d+1)`` capacity tensor (see
@@ -240,7 +269,12 @@ def plan_many(nets: Union[np.ndarray, Sequence[OverlayNetwork]],
     planner when the registry has one and the scalar loop otherwise —
     silently, because the fallback is *declared*; ``engine="batched"``
     additionally warns once per scheme when it has to fall back;
-    ``engine="scalar"`` always runs the per-network oracle.
+    ``engine="scalar"`` always runs the per-network oracle.  ``profile``
+    (optional, ``repro.obs.profile.PlannerProfile``-shaped) records batch
+    shape, resolved engine and wall time, plus per-stage timings for
+    schemes that declared ``accepts_profile`` (fr/ftr: bisection,
+    candidate search, witness extraction...) — without changing what is
+    planned.
 
     The result's ``engine`` field reports which path actually planned the
     batch; on the scalar path the original :class:`RepairPlan` objects ride
@@ -252,12 +286,23 @@ def plan_many(nets: Union[np.ndarray, Sequence[OverlayNetwork]],
     is_tensor = isinstance(nets, np.ndarray)
     if engine == "batched" and spec.batched is None:
         _warn_scalar_fallback(scheme, "plan_many")
-    if spec.batched is not None and engine != "scalar":
+    use_batched = spec.batched is not None and engine != "scalar"
+    if profile is not None:
+        profile.note(scheme=spec.name,
+                     batch=int(nets.shape[0]) if is_tensor else len(nets),
+                     d=params.d,
+                     engine="batched" if use_batched else "scalar",
+                     fallback=engine == "batched" and spec.batched is None)
+    if use_batched:
         caps = nets if is_tensor else caps_tensor(nets)
-        return spec.batched(caps, params, **kw)
+        if spec.accepts_profile and profile is not None:
+            kw["profile"] = profile
+        with _pstage(profile, "total"):
+            return spec.batched(caps, params, **kw)
     net_list = ([OverlayNetwork(c.tolist()) for c in nets] if is_tensor
                 else list(nets))
-    plans = [spec.scalar(n, params, **kw) for n in net_list]
+    with _pstage(profile, "total"):
+        plans = [spec.scalar(n, params, **kw) for n in net_list]
     return _batch_from_plans(spec, plans, params)
 
 
@@ -289,12 +334,12 @@ def _batch_from_plans(spec: SchemeSpec, plans: List[RepairPlan],
 register_scheme("star", plan_star, batched=plan_star_batch, topology="star",
                 description="conventional uniform-beta star [3] (baseline)")
 register_scheme("fr", plan_fr, batched=plan_fr_batch, accepts_witness=True,
-                topology="star",
+                accepts_profile=True, topology="star",
                 description="Flexible Regeneration on the star (Section III)")
 register_scheme("tr", plan_tr, batched=plan_tr_batch, topology="tree",
                 description="tree topology, uniform traffic (Algorithm 1)")
 register_scheme("ftr", plan_ftr, batched=plan_ftr_batch, accepts_witness=True,
-                topology="tree",
+                accepts_profile=True, topology="tree",
                 description="flexible traffic on a searched tree (Alg. 2)")
 register_scheme("shah", plan_shah, batched=plan_shah_batch, topology="star",
                 description="the (beta_max, gamma) scheme of Shah et al. [6]")

@@ -39,6 +39,27 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 
+# Every monotone counter attribute and the ``summary()`` key it lands
+# under — the round-trip contract tests/test_metrics.py pins (a counter
+# added without a summary key, or renamed on one side only, fails there).
+COUNTER_SUMMARY_KEYS: Dict[str, str] = {
+    "completed": "completed",
+    "aborted": "aborted",
+    "carryover_aborts": "carryover_aborts",
+    "cold_aborts": "cold_aborts",
+    "migrations": "migrations",
+    "work_saved": "work_saved_blocks",
+    "data_loss_events": "data_loss_events",
+    "watchdog_flags": "watchdog_flags",
+    "watchdog_replans": "watchdog_replans",
+    "evictions": "evictions",
+    "watchdog_giveups": "watchdog_giveups",
+    "degraded_admissions": "degraded_admissions",
+    "degrade_events": "degrade_events",
+    "max_backlog": "max_backlog",
+}
+
+
 @dataclasses.dataclass
 class FleetMetrics:
     """Online accumulator; call ``observe`` on every state change."""

@@ -121,6 +121,13 @@ class Scenario:
     degraded_d: bool = False          # admit with d' in [k, d) helpers when
     #                                   fewer than d are healthy (functional
     #                                   repair stays sound for any d >= k)
+    # -- observability (ISSUE 7; OFF by default: with trace off the
+    #    simulator allocates no recorder and the default path stays
+    #    bitwise identical — tracing is observation, not perturbation) ----
+    trace: bool = False               # own a FlightRecorder + link tracer
+    trace_capacity: int = 1 << 16     # ring-buffer size (oldest events are
+    #                                   overwritten past it, counted as
+    #                                   dropped)
 
     def __post_init__(self):
         if self.num_nodes < 2:
@@ -185,6 +192,9 @@ class Scenario:
                 f"watchdog_backoff must be >= 1, got "
                 f"{self.watchdog_backoff}: a base below 1 re-checks "
                 f"faster after every failure")
+        if self.trace_capacity < 1:
+            raise ValueError(
+                f"trace_capacity must be >= 1, got {self.trace_capacity}")
 
 
 # ---------------------------------------------------------------------------

@@ -147,6 +147,11 @@ class ActiveRepair:
     avoid: Tuple[int, ...] = ()         # providers evicted as stragglers —
     #                                     not re-drawn while alternatives
     #                                     exist
+    rid: int = -1                       # repair id for the flight recorder
+    #                                     (ISSUE 7): stable across aborts,
+    #                                     evictions and re-admissions, so a
+    #                                     slot's whole lifecycle shares one
+    #                                     span tree.  -1 when tracing is off
 
     @property
     def providers(self) -> List[int]:
@@ -217,6 +222,14 @@ class LinkShareModel:
     :meth:`nominal_time`) keep reading ``caps``.  ``out_mult`` (optional)
     is a per-source-node rate multiplier for silent brownouts: it scales
     the *true* rates only — a degraded node looks fine to the planner.
+
+    ``tracer`` (optional, ISSUE 7) observes the occupancy ledger: every
+    per-link user-count change in :meth:`acquire` / :meth:`release` is
+    reported to ``tracer.on_users(link, users)`` (the
+    ``repro.obs.timeline.LinkUsageTracer`` contract), from which exact
+    utilization/contention timelines are integrated online.  ``None``
+    (default) skips the calls — the share arithmetic itself is never
+    touched, so tracing cannot perturb a run.
     """
 
     def __init__(self, caps: np.ndarray,
@@ -224,6 +237,7 @@ class LinkShareModel:
         self.caps = caps
         self.believed = believed
         self.out_mult: Optional[np.ndarray] = None
+        self.tracer = None
         self.users: Dict[Link, int] = {}
 
     def true_cap(self, link: Link) -> float:
@@ -240,7 +254,10 @@ class LinkShareModel:
 
     def acquire(self, links: Sequence[Tuple[Link, float]]) -> None:
         for link, _ in links:
-            self.users[link] = self.users.get(link, 0) + 1
+            m = self.users.get(link, 0) + 1
+            self.users[link] = m
+            if self.tracer is not None:
+                self.tracer.on_users(link, m)
 
     def release(self, links: Sequence[Tuple[Link, float]]) -> None:
         for link, _ in links:
@@ -249,6 +266,8 @@ class LinkShareModel:
                 self.users[link] = m
             else:
                 self.users.pop(link, None)
+            if self.tracer is not None:
+                self.tracer.on_users(link, max(m, 0))
 
     def share(self, link: Link) -> float:
         """Bandwidth each current occupant of ``link`` receives."""

@@ -67,6 +67,19 @@ Plan-vs-reality robustness (ISSUE 6), all OFF by default:
   admitted with d' in [k, d) helpers (functional repair is sound for any
   d >= k, Dimakis et al. 0803.0632) instead of queueing forever.
 
+Observability (ISSUE 7): with ``Scenario.trace`` on the simulator owns a
+``repro.obs.FlightRecorder`` and emits the repair-lifecycle vocabulary —
+``repair_queued`` (reason fail|abort|evict) / ``repair_admitted`` /
+``repair_deferred`` / ``repair_abort`` / ``repair_evicted`` /
+``repair_replan`` (kind migration|watchdog) / ``repair_complete`` plus
+``watchdog_flag`` / ``watchdog_giveup``, node events (``node_fail`` /
+``node_repaired`` / ``node_degrade`` / ``node_recover``), and
+``data_loss`` / ``capacity_shock`` / ``estimate_refresh`` — while the
+share model streams per-link occupancy into a ``LinkUsageTracer``.
+Every emission site is guarded and none touches an rng stream, so traced
+and untraced runs are bitwise identical (pinned by the goldens and
+tests/test_obs.py): tracing is observation, not perturbation.
+
 Determinism: one root ``seed`` spawns named child streams (capacities,
 failures, providers, reads, shocks, estimates, degrades) via
 ``np.random.default_rng([seed, stream])``, and all same-time events have
@@ -82,6 +95,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import CodeParams
+from repro.obs import FlightRecorder, LinkUsageTracer
 
 from .cluster import ClusterState
 from .events import (CAPACITY_SHOCK, DEGRADE, ESTIMATE_REFRESH, Event,
@@ -108,6 +122,9 @@ class QueuedRepair(NamedTuple):
     evicted a straggling provider from: evicted providers are not re-drawn
     while alternatives exist, the mitigation budget persists across the
     requeue, and the backoff clock is not reset by re-admission.
+    ``rid`` is the flight-recorder repair id (ISSUE 7), assigned at the
+    original failure and carried through every abort/eviction requeue so
+    one lifecycle is one span tree; -1 when tracing is off.
     """
 
     fail_time: float
@@ -117,6 +134,7 @@ class QueuedRepair(NamedTuple):
     avoid: Tuple[int, ...] = ()
     retries: int = 0
     next_check: float = 0.0
+    rid: int = -1
 
 
 class FleetSimulator:
@@ -141,6 +159,22 @@ class FleetSimulator:
         self.cluster = ClusterState(base, rack_size=scenario.rack_size)
         self.caps_base = self.cluster.caps.copy()
         self.shares = LinkShareModel(self.cluster.caps)
+
+        # -- flight recorder (ISSUE 7): allocated only when asked for, and
+        #    every emission site is guarded, so the default path runs the
+        #    exact pre-observability instruction stream (no rng touched)
+        self._rid_seq = 0
+        self.recorder: Optional[FlightRecorder] = None
+        self.link_tracer: Optional[LinkUsageTracer] = None
+        if scenario.trace:
+            self.recorder = FlightRecorder(
+                capacity=scenario.trace_capacity,
+                meta={"seed": seed, "num_nodes": n, "k": params.k,
+                      "d": params.d, "duration": scenario.duration,
+                      "policy": getattr(policy, "name", "?")})
+            self.link_tracer = LinkUsageTracer(clock=lambda: self.now,
+                                               recorder=self.recorder)
+            self.shares.tracer = self.link_tracer
 
         self.now = 0.0
         self.queue: List[QueuedRepair] = []         # fail-time-ordered FIFO
@@ -192,6 +226,36 @@ class FleetSimulator:
         self.metrics = FleetMetrics(n=n, k=params.k,
                                     failure_rate=scenario.failure_rate)
 
+    # -- flight recorder helpers --------------------------------------------
+
+    def _new_rid(self) -> int:
+        """Next repair id.  Counted unconditionally (it is one integer
+        increment and touches no rng), so traced and untraced runs agree
+        on every id."""
+        rid = self._rid_seq
+        self._rid_seq += 1
+        return rid
+
+    def _emit_complete(self, r: ActiveRepair) -> None:
+        """Called with ``r``'s links still acquired: the bottleneck is
+        judged under the shares the repair actually finished at."""
+        worst, worst_t = None, -1.0
+        for link, f in r.links:
+            s = self.shares.share(link)
+            t = f / s if s > 0.0 else math.inf
+            if worst is None or t > worst_t:
+                worst, worst_t = link, t
+        realized = self.now - r.plan_t0
+        err = (realized / r.predicted - 1.0
+               if math.isfinite(r.predicted) and r.predicted > 0 else None)
+        self.recorder.emit(self.now, "repair_complete", rid=r.rid,
+                           node=r.node, realized=realized,
+                           predicted=r.predicted, plan_err=err,
+                           regen=self.now - r.start_time,
+                           wait=r.start_time - r.fail_time,
+                           bottleneck=list(worst) if worst else None)
+        self.recorder.emit(self.now, "node_repaired", node=r.node)
+
     # -- stochastic clocks --------------------------------------------------
 
     def _draw_next_fail(self) -> float:
@@ -226,6 +290,9 @@ class FleetSimulator:
         self.events.push(Event(self.now + duration, RECOVER,
                                (node, self._degrade_gen[node])))
         self.metrics.on_degrade()
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "node_degrade", node=node,
+                               factor=factor, duration=duration)
 
     def _poisson_degrade(self) -> None:
         sc = self.scenario
@@ -239,6 +306,8 @@ class FleetSimulator:
     def _recover(self, node: int, gen: int) -> None:
         if self.degrade is not None and self._degrade_gen[node] == gen:
             self.degrade[node] = 1.0
+            if self.recorder is not None:
+                self.recorder.emit(self.now, "node_recover", node=node)
 
     # -- estimate error -----------------------------------------------------
 
@@ -260,6 +329,8 @@ class FleetSimulator:
         else:
             self.believed[:] = eff
         np.fill_diagonal(self.believed, 0.0)
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "estimate_refresh")
 
     # -- event handlers -----------------------------------------------------
 
@@ -273,9 +344,18 @@ class FleetSimulator:
         if self.cluster.state[node] != 0:       # already failed / repairing
             return False
         self.cluster.fail(node)
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "node_fail", node=node)
         if self.cluster.num_healthy < self.params.k:
             self.metrics.on_data_loss()
-        self.queue.append(QueuedRepair(self.now, node))
+            if self.recorder is not None:
+                self.recorder.emit(self.now, "data_loss",
+                                   unavailable=self.cluster.num_unavailable)
+        self.queue.append(QueuedRepair(self.now, node, rid=self._new_rid()))
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "repair_queued",
+                               rid=self.queue[-1].rid, node=node,
+                               reason="fail")
         # tear down degraded reads touching the failed node: their links
         # must not linger as phantom flows until the scheduled departure
         # (the stale READ_DEPARTURE becomes a no-op when it fires)
@@ -297,11 +377,18 @@ class FleetSimulator:
                         if link[1] != node}
                 survivors = tuple(p for p in r.providers if p != node)
                 self.queue.append(QueuedRepair(r.fail_time, r.node,
-                                               bank, survivors))
+                                               bank, survivors, rid=r.rid))
                 self.metrics.on_abort(carryover=True)
             else:
-                self.queue.append(QueuedRepair(r.fail_time, r.node))
+                self.queue.append(QueuedRepair(r.fail_time, r.node,
+                                               rid=r.rid))
                 self.metrics.on_abort(carryover=False)
+            if self.recorder is not None:
+                self.recorder.emit(self.now, "repair_abort", rid=r.rid,
+                                   node=r.node, lost_provider=node,
+                                   carryover=self.scenario.carryover)
+                self.recorder.emit(self.now, "repair_queued", rid=r.rid,
+                                   node=r.node, reason="abort")
         if lost:
             # requeued aborts carry older fail_times than the failure that
             # evicted them; restore oldest-first admission order (stable on
@@ -344,6 +431,8 @@ class FleetSimulator:
         np.fill_diagonal(self.cluster.caps, 0.0)
         self.events.push(Event(self.now + sc.shock_period, CAPACITY_SHOCK))
         self._replan_pending = True
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "capacity_shock")
 
     def _read_arrival(self) -> None:
         sc = self.scenario
@@ -481,6 +570,9 @@ class FleetSimulator:
                     self.cluster.abort_repair(q.node)   # back to FAILED
                     deferred.append(q)
                     num_deferred += 1
+                    if self.recorder is not None:
+                        self.recorder.emit(self.now, "repair_deferred",
+                                           rid=q.rid, node=q.node)
                     continue
                 flows = plan_links(plan, ids)
                 if q.bank:
@@ -501,7 +593,15 @@ class FleetSimulator:
                     fail_time=q.fail_time, start_time=self.now, bank=bank,
                     plan_t0=self.now, predicted=predicted,
                     retries=q.retries, next_check=q.next_check,
-                    avoid=q.avoid))
+                    avoid=q.avoid, rid=q.rid))
+                if self.recorder is not None:
+                    self.recorder.emit(
+                        self.now, "repair_admitted", rid=q.rid, node=q.node,
+                        scheme=plan.scheme, d=len(ids) - 1,
+                        helpers=[int(h) for h in ids[1:]],
+                        banked=float(sum(bank.values())) if bank else 0.0,
+                        predicted=predicted,
+                        degraded=len(ids) - 1 < self.params.d)
             if not num_deferred:
                 break
         if deferred:
@@ -551,6 +651,11 @@ class FleetSimulator:
                 r.plan_t0 = self.now
                 r.predicted = eta_new
                 self.metrics.on_migration(credited, total)
+                if self.recorder is not None:
+                    self.recorder.emit(self.now, "repair_replan", rid=r.rid,
+                                       node=r.node, kind="migration",
+                                       scheme=plan.scheme, credited=credited,
+                                       total=total, predicted=eta_new)
                 self.shares.recompute(self.active)
 
     # -- watchdog: plan-vs-reality mitigation -------------------------------
@@ -577,6 +682,10 @@ class FleetSimulator:
                         else 0.0)
             if stalled or done * sc.watchdog_lag < expected:
                 self.metrics.on_watchdog_flag()
+                if self.recorder is not None:
+                    self.recorder.emit(self.now, "watchdog_flag", rid=r.rid,
+                                       node=r.node, stalled=stalled,
+                                       done=done, expected=expected)
                 self._mitigate(r)
         self.events.push(Event(self.now + sc.watchdog_period, WATCHDOG))
 
@@ -597,6 +706,9 @@ class FleetSimulator:
         attempt = r.retries
         if attempt > sc.watchdog_retries:
             self.metrics.on_watchdog_giveup()
+            if self.recorder is not None:
+                self.recorder.emit(self.now, "watchdog_giveup", rid=r.rid,
+                                   node=r.node, retries=attempt)
             r.next_check = math.inf
             return
         r.retries = attempt + 1
@@ -636,6 +748,11 @@ class FleetSimulator:
         r.plan_t0 = self.now
         r.predicted = eta_new
         self.metrics.on_watchdog_replan(credited, total)
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "repair_replan", rid=r.rid,
+                               node=r.node, kind="watchdog",
+                               scheme=plan.scheme, credited=credited,
+                               total=total, predicted=eta_new)
         self.shares.recompute(self.active)
 
     def _evict_straggler(self, r: ActiveRepair) -> None:
@@ -667,9 +784,15 @@ class FleetSimulator:
         self.queue.append(QueuedRepair(
             r.fail_time, r.node, bank, survivors,
             avoid=r.avoid + (straggler,), retries=r.retries,
-            next_check=r.next_check))
+            next_check=r.next_check, rid=r.rid))
         self.queue.sort(key=lambda q: q.fail_time)
         self.metrics.on_eviction()
+        if self.recorder is not None:
+            self.recorder.emit(self.now, "repair_evicted", rid=r.rid,
+                               node=r.node, straggler=straggler,
+                               banked=float(sum(bank.values())))
+            self.recorder.emit(self.now, "repair_queued", rid=r.rid,
+                               node=r.node, reason="evict")
 
     # -- main loop ----------------------------------------------------------
 
@@ -694,6 +817,8 @@ class FleetSimulator:
 
     def _complete(self, i: int) -> None:
         r = self.active.pop(i)
+        if self.recorder is not None:
+            self._emit_complete(r)          # before releasing the links
         r.remaining = 0.0
         self.shares.release(r.links)
         self.cluster.complete_repair(r.node)
@@ -767,6 +892,12 @@ class FleetSimulator:
             self.metrics.observe(self.now,
                                  len(self.queue) + len(self.active),
                                  self.cluster.num_unavailable)
+        if self.recorder is not None:
+            # close the books: exact link aggregates and the legacy summary
+            # ride in the trace header, so one file is self-contained
+            self.link_tracer.finish(self.now)
+            self.recorder.meta["links"] = self.link_tracer.snapshot()
+            self.recorder.meta["summary"] = self.metrics.summary()
         return self.metrics
 
 

@@ -1,0 +1,167 @@
+"""FleetMetrics unit coverage (ISSUE 7 satellite).
+
+The fleet tests exercise the metrics through whole simulations; these pin
+the accumulator itself:
+
+* ``_pct`` closed forms — empty list, single sample, ties, and numpy's
+  linear interpolation between order statistics;
+* the counter round-trip contract — every monotone counter listed in
+  ``COUNTER_SUMMARY_KEYS`` lands in ``summary()`` under its declared key
+  after its ``on_*`` hook fires (a counter added without a summary key,
+  or renamed on one side only, fails here);
+* ``observe`` closed forms — time-weighted mean backlog, the monotone
+  clock, and the MTTDL intensity accruing past the loss boundary.
+"""
+import math
+
+import pytest
+
+from repro.fleet import FleetMetrics
+from repro.fleet.metrics import COUNTER_SUMMARY_KEYS
+
+
+def _metrics(**kw) -> FleetMetrics:
+    kw.setdefault("n", 12)
+    kw.setdefault("k", 3)
+    kw.setdefault("failure_rate", 1e-3)
+    return FleetMetrics(**kw)
+
+
+# ---------------------------------------------------------------------------
+# _pct closed forms
+# ---------------------------------------------------------------------------
+
+def test_pct_empty_is_zero():
+    for q in (0, 50, 99, 100):
+        assert FleetMetrics._pct([], q) == 0.0
+
+
+def test_pct_single_sample_is_that_sample():
+    for q in (0, 50, 99, 100):
+        assert FleetMetrics._pct([5.0], q) == 5.0
+
+
+def test_pct_ties_collapse():
+    assert FleetMetrics._pct([3.0, 3.0, 3.0, 3.0], 99) == 3.0
+    assert FleetMetrics._pct([3.0, 3.0, 3.0, 3.0], 50) == 3.0
+
+
+def test_pct_linear_interpolation():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    # numpy's default "linear" method: position (n-1) * q/100
+    assert FleetMetrics._pct(xs, 50) == pytest.approx(2.5)
+    assert FleetMetrics._pct(xs, 99) == pytest.approx(3.97)
+    assert FleetMetrics._pct(xs, 0) == 1.0
+    assert FleetMetrics._pct(xs, 100) == 4.0
+
+
+def test_pct_order_invariant():
+    assert (FleetMetrics._pct([4.0, 1.0, 3.0, 2.0], 50)
+            == FleetMetrics._pct([1.0, 2.0, 3.0, 4.0], 50))
+
+
+# ---------------------------------------------------------------------------
+# counter round-trip: every COUNTER_SUMMARY_KEYS attr reaches summary()
+# ---------------------------------------------------------------------------
+
+def _fire_all_counters(m: FleetMetrics) -> None:
+    """Call every on_* hook at least once with distinct-looking args."""
+    m.observe(0.0, 2, 0)
+    m.observe(5.0, 1, 0)
+    m.on_complete(fail_time=0.0, start_time=1.0, end_time=5.0,
+                  plan_t0=1.0, predicted=2.0)
+    m.on_abort(carryover=True)
+    m.on_abort(carryover=False)
+    m.on_carryover(saved=30.0, planned=100.0)
+    m.on_migration(saved=10.0, planned=50.0)
+    m.on_data_loss()
+    m.on_watchdog_flag()
+    m.on_watchdog_replan(saved=5.0, planned=20.0)
+    m.on_eviction()
+    m.on_watchdog_giveup()
+    m.on_degraded_admission()
+    m.on_degrade()
+
+
+def test_every_counter_round_trips_into_summary():
+    m = _metrics()
+    _fire_all_counters(m)
+    summary = m.summary()
+    for attr, key in COUNTER_SUMMARY_KEYS.items():
+        assert key in summary, f"{attr}: summary key {key!r} missing"
+        assert summary[key] == getattr(m, attr), \
+            f"{attr}: summary[{key!r}]={summary[key]!r} != " \
+            f"attribute {getattr(m, attr)!r}"
+
+
+def test_counters_moved_off_zero():
+    """The round-trip test is vacuous if a hook never fires its counter."""
+    m = _metrics()
+    _fire_all_counters(m)
+    for attr in COUNTER_SUMMARY_KEYS:
+        assert getattr(m, attr) > 0, f"{attr} never incremented"
+
+
+def test_abort_split_and_migration_bookkeeping():
+    m = _metrics()
+    m.on_abort(carryover=True)
+    m.on_abort(carryover=False)
+    m.on_abort(carryover=False)
+    assert (m.aborted, m.carryover_aborts, m.cold_aborts) == (3, 1, 2)
+    m.on_migration(saved=25.0, planned=100.0)
+    assert m.migrations == 1 and m.work_saved == 25.0
+    assert m.credit_fractions == [0.25]
+    # zero-planned credit must not divide by zero
+    m.on_carryover(saved=0.0, planned=0.0)
+    assert m.credit_fractions[-1] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# observe closed forms
+# ---------------------------------------------------------------------------
+
+def test_mean_backlog_time_weighted():
+    m = _metrics()
+    m.observe(0.0, 2, 0)
+    m.observe(10.0, 0, 0)      # 2 repairs pending for 10s
+    m.observe(20.0, 0, 0)      # then idle for 10s
+    s = m.summary()
+    assert s["mean_backlog"] == pytest.approx(1.0)
+    assert s["max_backlog"] == 2
+
+
+def test_observe_rejects_backwards_time():
+    m = _metrics()
+    m.observe(5.0, 0, 0)
+    with pytest.raises(ValueError):
+        m.observe(4.0, 0, 0)
+
+
+def test_mttdl_intensity_accrues_past_boundary():
+    # n=4, k=2: the at-risk boundary is n-k = 2 slots down
+    m = _metrics(n=4, k=2, failure_rate=0.1)
+    m.observe(0.0, 0, 2)
+    m.observe(10.0, 0, 3)      # 10s at the boundary: rate * healthy=2
+    m.observe(20.0, 0, 0)      # 10s past it: rate * healthy=1
+    assert m.expected_losses == pytest.approx(0.1 * 2 * 10 + 0.1 * 1 * 10)
+    assert m.summary()["mttdl_estimate"] == pytest.approx(
+        20.0 / m.expected_losses)
+
+
+def test_mttdl_infinite_when_never_at_risk():
+    m = _metrics()
+    m.observe(0.0, 0, 0)
+    m.observe(10.0, 0, 0)
+    assert math.isinf(m.summary()["mttdl_estimate"])
+
+
+def test_plan_error_relative():
+    m = _metrics()
+    m.on_complete(fail_time=0.0, start_time=1.0, end_time=5.0,
+                  plan_t0=1.0, predicted=2.0)
+    # realized 4s against a 2s prediction: +100% late
+    assert m.plan_errors == [pytest.approx(1.0)]
+    # non-finite or missing predictions record nothing
+    m.on_complete(0.0, 1.0, 5.0, plan_t0=1.0, predicted=math.inf)
+    m.on_complete(0.0, 1.0, 5.0)
+    assert len(m.plan_errors) == 1

@@ -1,0 +1,372 @@
+"""Flight recorder, telemetry, and planner profiling (ISSUE 7 acceptance).
+
+The load-bearing invariant: **tracing is observation, never perturbation**.
+The simulator allocates its repair ids unconditionally (one integer, no
+rng), and every emission sits behind ``if recorder is not None`` — so a
+traced run must produce a bitwise-identical metrics summary to the
+untraced run at the same seed, which the purity tests pin on both a quiet
+steady scenario and the full mitigation stack (brownouts + watchdog +
+evictions).  On top of that:
+
+* span accounting — finished ``transfer`` spans in the Chrome export
+  equal the metrics' ``completed + aborted``, repair ids are stable
+  across abort/re-admission, and a no-contention single repair predicts
+  its own realized time (plan_err == 0);
+* link telemetry — per-link busy time and user-seconds integrate exactly
+  for a closed-form single repair;
+* ring buffer — a tiny ``trace_capacity`` drops oldest events, counts
+  them, and still exports valid JSON;
+* planner profiling — ``plan_many(..., profile=)`` records the declared
+  fr/ftr stages without changing any planned value;
+* the report module's analyses agree with the metrics counters.
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import CodeParams, mbr_point, plan_many
+from repro.fleet import (SCENARIOS, FixedPolicy, FleetSimulator,
+                         FlexiblePolicy, Scenario, make_policy, mitigated,
+                         simulate)
+from repro.obs import (FlightRecorder, LinkUsageTracer, PlannerProfile,
+                       SCHEMA_VERSION, TRACE_KIND, chrome_trace,
+                       finished_transfer_spans, json_sanitize)
+from repro.obs.report import (load_jsonl, node_brownout_timeline,
+                              plan_error_attribution, render_report,
+                              top_bottleneck_links, watchdog_funnel)
+
+PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+
+
+def _fixed_caps(n: int, seed: int = 0, lo: float = 10.0, hi: float = 120.0):
+    caps = np.random.default_rng(seed).uniform(lo, hi, size=(n, n))
+    np.fill_diagonal(caps, 0.0)
+    return caps, (lambda rng, m: caps.copy())
+
+
+def _first_providers(failed, healthy, rng):
+    return [h for h in healthy if h != failed][:PARAMS.d]
+
+
+def _traced(sc: Scenario, policy, seed: int = 0, **overrides):
+    sim = FleetSimulator(
+        dataclasses.replace(sc, trace=True, **overrides),
+        policy, PARAMS, seed=seed)
+    metrics = sim.run()
+    return sim, metrics
+
+
+# ---------------------------------------------------------------------------
+# tracing is observation, never perturbation
+# ---------------------------------------------------------------------------
+
+def test_recorder_absent_by_default():
+    sc = SCENARIOS["steady"](16, failure_rate=2e-3, duration=500.0)
+    sim = FleetSimulator(sc, FixedPolicy("fr"), PARAMS, seed=0)
+    assert sim.recorder is None and sim.link_tracer is None
+    assert sim.shares.tracer is None
+
+
+@pytest.mark.parametrize("kind,policy,seed", [
+    ("steady", FixedPolicy("fr"), 0),
+    ("stragglers", FlexiblePolicy(), 1),
+])
+def test_traced_summary_bitwise_equals_untraced(kind, policy, seed):
+    sc = SCENARIOS[kind](16, failure_rate=4e-3, duration=1500.0)
+    if kind == "stragglers":
+        sc = mitigated(sc)     # watchdog + evictions + degraded-d on
+    untraced = simulate(sc, policy, PARAMS, seed=seed)
+    sim, metrics = _traced(sc, policy, seed=seed)
+    assert metrics.summary() == untraced
+    assert len(sim.recorder) > 0
+
+
+def test_span_count_equals_completed_plus_aborted():
+    sc = mitigated(SCENARIOS["stragglers"](16, failure_rate=4e-3,
+                                           duration=1500.0))
+    sim, metrics = _traced(sc, FlexiblePolicy(), seed=1)
+    trace = sim.recorder.to_chrome()
+    assert finished_transfer_spans(trace) == (metrics.completed
+                                              + metrics.aborted)
+
+
+# ---------------------------------------------------------------------------
+# deterministic single-repair lifecycle
+# ---------------------------------------------------------------------------
+
+def _single_failure_sim():
+    n = 10
+    caps, model = _fixed_caps(n, seed=3)
+    sc = Scenario(num_nodes=n, duration=1000.0, failure_rate=0.0,
+                  failures=((10.0, 0),), capacity_model=model,
+                  provider_picker=_first_providers)
+    return _traced(sc, FixedPolicy("star"))
+
+
+def test_single_repair_event_sequence():
+    sim, metrics = _single_failure_sim()
+    assert metrics.completed == 1 and metrics.aborted == 0
+    evs = sim.recorder.events
+    names = [e["ev"] for e in evs]
+    for needed in ("node_fail", "repair_queued", "repair_admitted",
+                   "repair_complete", "node_repaired"):
+        assert needed in names, f"missing {needed} in {names}"
+    assert names.index("repair_queued") < names.index("repair_admitted") \
+        < names.index("repair_complete")
+    admitted = next(e for e in evs if e["ev"] == "repair_admitted")
+    complete = next(e for e in evs if e["ev"] == "repair_complete")
+    assert admitted["rid"] == complete["rid"]
+    assert admitted["node"] == 0
+    assert admitted["scheme"] == "star"
+    assert admitted["d"] == PARAMS.d
+    assert len(admitted["helpers"]) == PARAMS.d
+    # no contention, perfect knowledge: the plan predicts its own time
+    assert complete["realized"] == pytest.approx(metrics.regen_times[0])
+    assert complete["plan_err"] == pytest.approx(0.0, abs=1e-9)
+    assert complete["predicted"] == pytest.approx(complete["realized"])
+    # the realized bottleneck is one of the plan's links
+    src, dst = complete["bottleneck"]
+    assert dst == 0 and src in admitted["helpers"]
+
+
+def test_single_repair_link_conservation():
+    sim, metrics = _single_failure_sim()
+    duration = metrics.regen_times[0]
+    snap = sim.recorder.meta["links"]
+    # a star plan holds all d provider->newcomer links, each exactly one
+    # user, for exactly the repair duration
+    assert len(snap["links"]) == PARAMS.d
+    for key, st in snap["links"].items():
+        assert key.endswith("->0")
+        assert st["busy_time"] == pytest.approx(duration)
+        assert st["user_seconds"] == pytest.approx(duration)
+        assert st["max_users"] == 1
+    assert snap["total_user_seconds"] == pytest.approx(PARAMS.d * duration)
+    # the acceptance inequality, tight here: user-seconds >= completed *
+    # regen_mean
+    assert snap["total_user_seconds"] >= metrics.completed * duration
+
+
+def test_abort_keeps_rid_across_readmission():
+    n = 10
+    caps, model = _fixed_caps(n, seed=3)
+    # node 1 is a provider of node 0's repair and fails mid-transfer
+    sc = Scenario(num_nodes=n, duration=1000.0, failure_rate=0.0,
+                  failures=((10.0, 0), (11.0, 1)), capacity_model=model,
+                  provider_picker=_first_providers)
+    sim, metrics = _traced(sc, FixedPolicy("star"))
+    assert metrics.aborted >= 1 and metrics.completed == 2
+    evs = sim.recorder.events
+    aborts = [e for e in evs if e["ev"] == "repair_abort"]
+    assert aborts and aborts[0]["lost_provider"] == 1
+    rid = aborts[0]["rid"]
+    admissions = [e for e in evs
+                  if e["ev"] == "repair_admitted" and e["rid"] == rid]
+    assert len(admissions) == 2, "rid must survive abort -> re-admission"
+    completes = [e for e in evs
+                 if e["ev"] == "repair_complete" and e["rid"] == rid]
+    assert len(completes) == 1
+    assert finished_transfer_spans(sim.recorder.to_chrome()) == (
+        metrics.completed + metrics.aborted)
+
+
+# ---------------------------------------------------------------------------
+# ring buffer
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_drops_oldest_and_still_exports():
+    sc = SCENARIOS["steady"](16, failure_rate=4e-3, duration=1500.0)
+    sim, metrics = _traced(sc, FixedPolicy("fr"), trace_capacity=8)
+    rec = sim.recorder
+    assert len(rec) <= 8
+    assert rec.dropped > 0
+    assert rec.header()["dropped"] == rec.dropped
+    # both exports stay valid strict JSON despite missing span begins
+    for line in rec.to_jsonl().splitlines():
+        json.loads(line)
+    json.dumps(rec.to_chrome(), allow_nan=False)
+    # and the purity invariant survives the tiny buffer
+    untraced = simulate(sc, FixedPolicy("fr"), PARAMS, seed=0)
+    assert metrics.summary() == untraced
+
+
+def test_zero_capacity_rejected():
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+    sc = SCENARIOS["steady"](16, failure_rate=2e-3, duration=100.0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(sc, trace=True, trace_capacity=0).__post_init__()
+
+
+# ---------------------------------------------------------------------------
+# json_sanitize / export formats
+# ---------------------------------------------------------------------------
+
+def test_json_sanitize():
+    out = json_sanitize({
+        "inf": math.inf, "ninf": -math.inf, "nan": math.nan,
+        "np": np.float64(2.5), "npi": np.int64(7),
+        "tup": (1.0, math.inf), 3: "intkey",
+    })
+    assert out == {"inf": None, "ninf": None, "nan": None, "np": 2.5,
+                   "npi": 7, "tup": [1.0, None], "3": "intkey"}
+
+
+def test_jsonl_round_trip(tmp_path):
+    sim, metrics = _single_failure_sim()
+    path = str(tmp_path / "trace.jsonl")
+    sim.recorder.save_jsonl(path)
+    header, events = load_jsonl(path)
+    assert header["schema_version"] == SCHEMA_VERSION
+    assert header["kind"] == TRACE_KIND
+    assert header["events"] == len(events) == len(sim.recorder)
+    assert header["meta"]["summary"]["completed"] == 1
+    assert [e["ev"] for e in events] == [e["ev"]
+                                         for e in sim.recorder.events]
+
+
+def test_chrome_trace_schema():
+    sim, _ = _single_failure_sim()
+    trace = sim.recorder.to_chrome()
+    assert trace["otherData"]["kind"] == TRACE_KIND
+    open_spans = {}
+    for e in trace["traceEvents"]:
+        assert {"ph", "pid", "ts"} <= set(e), e
+        if e["ph"] == "b":
+            open_spans[(e["cat"], e["id"])] = e
+        elif e["ph"] == "e":
+            assert open_spans.pop((e["cat"], e["id"]), None) is not None
+    assert not open_spans, "chrome_trace must close every span"
+
+
+def test_chrome_trace_closes_unfinished_spans():
+    # a repair queued but never admitted must still close at last_ts
+    events = [{"t": 1.0, "ev": "repair_queued", "rid": 0, "node": 3},
+              {"t": 2.0, "ev": "node_fail", "node": 3}]
+    trace = chrome_trace(events)
+    ends = [e for e in trace["traceEvents"] if e["ph"] == "e"]
+    assert len(ends) == 2
+    assert all(e["args"].get("unfinished") for e in ends)
+    assert all(e["ts"] == 2.0 * 1e6 for e in ends)
+
+
+# ---------------------------------------------------------------------------
+# report analyses agree with the metrics
+# ---------------------------------------------------------------------------
+
+def test_report_against_metrics():
+    sc = mitigated(SCENARIOS["stragglers"](16, failure_rate=4e-3,
+                                           duration=1500.0))
+    sim, metrics = _traced(sc, FlexiblePolicy(), seed=1)
+    header, events = sim.recorder.header(), sim.recorder.events
+    funnel = watchdog_funnel(events)
+    assert funnel["flags"] == metrics.watchdog_flags
+    assert funnel["replans"] == metrics.watchdog_replans
+    assert funnel["evictions"] == metrics.evictions
+    assert funnel["giveups"] == metrics.watchdog_giveups
+    top = top_bottleneck_links(header, events, k=5)
+    assert top and all(st["user_seconds"] >= 0 for _, st in top)
+    assert top == sorted(top, key=lambda kv: -kv[1]["user_seconds"])
+    brown = node_brownout_timeline(events, sc.duration)
+    assert sum(len(c["episodes"]) for c in brown.values()) \
+        == metrics.degrade_events
+    attribution = plan_error_attribution(events)
+    assert len(attribution) <= 10
+    text = render_report(header, events)
+    assert "bottleneck links" in text and "watchdog funnel" in text
+
+
+def test_link_stats_fallback_matches_online_integrals():
+    """With the header snapshot removed, reconstructing the per-link
+    aggregates from link_users events must reproduce the tracer's online
+    integrals (same information, two accumulators)."""
+    sim, _ = _single_failure_sim()
+    snap = sim.recorder.meta["links"]["links"]
+    header = sim.recorder.header()
+    header["meta"] = {"duration": 1000.0}
+    derived = dict(top_bottleneck_links(header, sim.recorder.events, k=99))
+    assert set(derived) == set(snap)
+    for key in snap:
+        assert derived[key]["busy_time"] == pytest.approx(
+            snap[key]["busy_time"])
+        assert derived[key]["user_seconds"] == pytest.approx(
+            snap[key]["user_seconds"])
+        assert derived[key]["max_users"] == snap[key]["max_users"]
+
+
+# ---------------------------------------------------------------------------
+# planner profiling
+# ---------------------------------------------------------------------------
+
+def _interior_params():
+    M, k, d, n = 600.0, 3, 6, 12
+    a_mbr, _ = mbr_point(M, k, d)
+    return CodeParams(n=n, k=k, d=d, M=M,
+                      alpha=0.5 * (M / k + a_mbr))
+
+
+def _caps_batch(B=16, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    caps = rng.uniform(10.0, 120.0, size=(B, d + 1, d + 1))
+    idx = np.arange(d + 1)
+    caps[:, idx, idx] = 0.0
+    return caps
+
+
+def test_profile_records_declared_stages_without_changing_plans():
+    caps = _caps_batch()
+    params = _interior_params()
+    for scheme, expect_stages in (
+            ("fr", {"star_bisection", "witness"}),
+            ("ftr", {"tr_seed", "candidates", "local_search",
+                     "final_solve", "witness"})):
+        bare = plan_many(caps, params, scheme, engine="batched")
+        prof = PlannerProfile()
+        profiled = plan_many(caps, params, scheme, engine="batched",
+                             profile=prof)
+        np.testing.assert_array_equal(bare.times, profiled.times)
+        np.testing.assert_array_equal(bare.traffic, profiled.traffic)
+        np.testing.assert_array_equal(bare.parents, profiled.parents)
+        s = prof.summary()
+        assert expect_stages <= set(s["stages"]), (scheme, s["stages"])
+        assert "total" in s["stages"]
+        assert s["counters"]["lanes"] == caps.shape[0]
+        assert s["meta"]["scheme"] == scheme
+        assert all(st["ms"] >= 0 and st["calls"] >= 1
+                   for st in s["stages"].values())
+
+
+def test_profile_msr_takes_closed_form():
+    prof = PlannerProfile()
+    plan_many(_caps_batch(), PARAMS, "fr", engine="batched", profile=prof)
+    s = prof.summary()
+    assert s["counters"]["closed_form_lanes"] == 16
+    assert s["counters"]["bisection_lanes"] == 0
+    assert "closed_form" in s["stages"]
+
+
+def test_profile_scalar_engine_still_notes():
+    prof = PlannerProfile()
+    plan_many(_caps_batch(B=4), PARAMS, "fr", engine="scalar",
+              profile=prof)
+    s = prof.summary()
+    assert s["meta"]["engine"] == "scalar"
+    assert "total" in s["stages"]
+
+
+def test_profile_stage_accumulates():
+    prof = PlannerProfile()
+    with prof.stage("a"):
+        pass
+    with prof.stage("a"):
+        pass
+    prof.count("widgets", 3)
+    prof.count("widgets", 2)
+    prof.note(hello="world")
+    s = prof.summary()
+    assert s["stages"]["a"]["calls"] == 2
+    assert s["counters"]["widgets"] == 5
+    assert s["meta"]["hello"] == "world"
