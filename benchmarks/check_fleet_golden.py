@@ -38,6 +38,7 @@ sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
 ROBUSTNESS_DEFAULTS = {
     "carryover": False,
     "migration": False,
+    "bank_aware_migration": False,
     "estimate_noise": 0.0,
     "estimate_refresh_period": 0.0,
     "degrade_rate": 0.0,

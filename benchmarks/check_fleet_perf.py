@@ -1,0 +1,110 @@
+"""CI perf-regression tripwire for the fleet event loop.
+
+Usage (after ``python -m benchmarks.fleet_scale --quick``):
+
+    python benchmarks/check_fleet_perf.py [--mode warn|fail] [--threshold 2.0]
+
+Compares the ``us_per_event`` rows of ``BENCH_fleet.json``'s ``perf``
+section against ``benchmarks/golden/fleet_perf_baseline.json`` and flags
+any row slower than ``threshold`` x its *machine-normalized* baseline:
+per-row ratios are divided by the median ratio across rows (the
+machine-speed factor), so a uniformly slower CI runner never trips, while
+one row that regressed relative to its row-mates — e.g. a change that
+silently reintroduces a full-rescan recompute in the sharing engine —
+does.  This is the guard the ISSUE 8 event-loop speedup lives behind: the
+baseline pins the incremental-engine throughput, so drifting back toward
+the PR-7 full-rescan numbers (also recorded per row in the perf section,
+as ``pr7_us_per_event``) trips long before the speedup is gone.
+
+``--mode warn`` (pull requests) prints GitHub warning annotations and
+exits 0; ``--mode fail`` (pushes to main) exits 1 on any tripped row.
+The old/new table is appended to ``$GITHUB_STEP_SUMMARY`` when set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "benchmarks", "golden",
+                        "fleet_perf_baseline.json")
+CURRENT = os.path.join(REPO_ROOT, "BENCH_fleet.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("warn", "fail"), default="warn")
+    ap.add_argument("--threshold", type=float, default=2.0)
+    args = ap.parse_args()
+
+    with open(BASELINE) as f:
+        base = json.load(f)
+    with open(CURRENT) as f:
+        got = json.load(f)
+    perf = got.get("perf", {})
+
+    ratios = {}
+    missing = []
+    for name, old in sorted(base["rows"].items()):
+        new = perf.get(name, {}).get("us_per_event")
+        if new is None:
+            missing.append(name)
+        else:
+            ratios[name] = new / old if old > 0 else float("inf")
+    finite = sorted(r for r in ratios.values() if r != float("inf"))
+    # machine-speed factor: the median ratio.  A uniformly faster/slower
+    # runner moves every row by the same factor; regressions stick out as
+    # rows far above it.
+    speed = finite[len(finite) // 2] if finite else 1.0
+
+    lines = [f"machine-speed factor (median ratio): {speed:.2f}x", "",
+             "| row | baseline us/ev | now us/ev | ratio | vs median | |",
+             "|---|---:|---:|---:|---:|---|"]
+    tripped = [(name, base["rows"][name], float("nan"), float("nan"))
+               for name in missing]
+    for name in missing:
+        lines.append(f"| {name} | {base['rows'][name]:.1f} | MISSING | | "
+                     f"| :boom: |")
+    for name, ratio in sorted(ratios.items()):
+        old = base["rows"][name]
+        new = perf[name]["us_per_event"]
+        rel = ratio / speed if speed > 0 else float("inf")
+        slow = rel > args.threshold
+        if slow:
+            tripped.append((name, old, new, rel))
+        lines.append(f"| {name} | {old:.1f} | {new:.1f} | {ratio:.2f}x | "
+                     f"{rel:.2f}x | {':warning:' if slow else ''} |")
+    table = "\n".join(lines)
+    print(table)
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(f"### fleet perf tripwire ({args.mode}, "
+                    f"{args.threshold:g}x)\n\n{table}\n")
+
+    if not tripped:
+        print(f"fleet perf tripwire OK: {len(base['rows'])} rows within "
+              f"{args.threshold:g}x of the machine-normalized baseline")
+        return 0
+    for name, old, new, rel in tripped:
+        if math.isnan(new):
+            msg = (f"{name}: baseline row ({old:.1f} us/ev) missing from "
+                   f"this run's BENCH_fleet.json perf section")
+        else:
+            msg = (f"{name}: {old:.1f} -> {new:.1f} us/ev "
+                   f"({rel:.2f}x > {args.threshold:g}x the machine-"
+                   f"normalized baseline)")
+        if args.mode == "warn":
+            print(f"::warning title=fleet perf tripwire::{msg}")
+        else:
+            print(f"::error title=fleet perf tripwire::{msg}")
+    print(f"fleet perf tripwire: {len(tripped)} row(s) tripped")
+    return 1 if args.mode == "fail" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,9 +39,23 @@ are strict JSON since schema v2 — non-finite floats (the quiet scenarios'
 literal — and carry a ``schema_version`` + ``meta`` header (root seed,
 quick flag, git describe).
 
-CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N] [--trace]``
-(CI runs the ``--quick`` smoke, which asserts the artifact exists and
-backlog is finite, plus a ``--trace`` pass checked by check_trace.py).
+Region scale (ISSUE 8): two additions ride on the incremental sharing
+engine.  ``ensemble_*`` config rows run K independent clusters (distinct
+seed streams, one scenario) through the lockstep multi-cluster driver
+(``repro.fleet.ensemble``) and report the pooled region-level summary
+plus cluster-bootstrap confidence intervals under a ``cis`` key; K is
+overridable with ``--clusters``.  A separate ``perf`` section measures
+event-loop throughput (wall-clock us per event) on three fixed rows and
+records the frozen PR-7 (full-rescan engine) reference alongside — the
+speedup the incremental engine is accountable for.  The ``configs``
+section stays bitwise reproducible; ``perf`` is wall clock by design and
+is guarded by ``benchmarks/check_fleet_perf.py`` (machine-normalized,
+like the planning tripwire), never by the bitwise golden.
+
+CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N] [--trace]
+[--clusters K]`` (CI runs the ``--quick`` smoke, which asserts the
+artifact exists and backlog is finite, plus a ``--trace`` pass checked
+by check_trace.py).
 """
 from __future__ import annotations
 
@@ -53,8 +67,9 @@ import time
 import zlib
 
 from repro.core import CodeParams
-from repro.fleet import SCENARIOS, FleetSimulator, make_policy, mitigated, \
-    simulate
+from repro.fleet import SCENARIOS, ClusterEnsemble, FleetSimulator, \
+    Scenario, make_policy, mitigated, simulate
+from repro.fleet.scenario import uniform_matrix
 from repro.obs import json_sanitize
 
 from .common import BENCH_SCHEMA_VERSION, quick_mode, row, run_meta, \
@@ -72,6 +87,66 @@ EVENT_BUDGET = 150
 
 def _config_seed(root_seed: int, name: str) -> int:
     return (root_seed * 1_000_003 + zlib.crc32(name.encode())) % (1 << 31)
+
+
+# -- event-loop throughput rows (ISSUE 8) -----------------------------------
+# Fixed scenarios sized so the event loop, not the planner, is the cost:
+# heavy degraded-read traffic (eventloop), abort churn (churn), and a
+# moderate read mix (readmix).  ``PR7_US_PER_EVENT`` freezes the
+# pre-incremental-engine (full-rescan) measurement of the SAME rows on the
+# reference machine — best of 5, identical event sequences (the engines
+# agree bitwise on every metric) — so ``speedup_vs_pr7`` in the perf
+# section is an apples-to-apples event-loop ratio, not a machine artifact.
+PERF_REPEATS = 3
+
+
+def _perf_rows():
+    cap = uniform_matrix(0.3, 8.0)
+    yield "eventloop_n96_star", Scenario(
+        num_nodes=96, duration=2500.0, failure_rate=6e-3,
+        capacity_model=cap, max_concurrent=64,
+        read_rate=8.0, read_duration=60.0), "star"
+    yield "churn_n64_star", Scenario(
+        num_nodes=64, duration=1500.0, failure_rate=1.2e-2,
+        capacity_model=cap, max_concurrent=32), "star"
+    yield "readmix_n96_star", Scenario(
+        num_nodes=96, duration=2000.0, failure_rate=4e-3,
+        capacity_model=cap, max_concurrent=48,
+        read_rate=2.0, read_duration=30.0), "star"
+
+
+PR7_US_PER_EVENT = {
+    "eventloop_n96_star": 231.2,
+    "churn_n64_star": 719.6,
+    "readmix_n96_star": 180.4,
+}
+
+
+def _ensemble_rows(quick: bool, clusters: int = 0):
+    """(name, scenario, policy, K) rows for the lockstep multi-cluster
+    driver.  ``clusters`` overrides the per-row default K when > 0."""
+    cap = uniform_matrix(0.3, 8.0)
+    if quick:
+        rows = [("ensemble_n96", Scenario(
+            num_nodes=96, duration=150.0, failure_rate=4e-3,
+            capacity_model=cap, max_concurrent=16), "star", 2)]
+    else:
+        rows = [
+            ("ensemble_n96", Scenario(
+                num_nodes=96, duration=600.0, failure_rate=4e-3,
+                capacity_model=cap, max_concurrent=32), "star", 4),
+            ("ensemble_n256", Scenario(
+                num_nodes=256, duration=300.0, failure_rate=2e-3,
+                capacity_model=cap, max_concurrent=48), "star", 4),
+        ]
+    for name, sc, pol, k in rows:
+        k = clusters if clusters > 0 else k
+        yield f"{name}_K{k}_{pol}", sc, pol, k
+
+
+ENSEMBLE_CI_KEYS = ("mean_backlog", "regen_p50", "regen_p99",
+                    "vulnerability_p99", "unavail_fraction",
+                    "mttdl_estimate")
 
 
 def _params(d: int = 6) -> CodeParams:
@@ -116,6 +191,12 @@ def _sweep(quick: bool):
                dataclasses.replace(sc, carryover=True), pol)
         yield (f"flaky_providers_n{n}_{pol}_mig",
                dataclasses.replace(sc, carryover=True, migration=True), pol)
+        # bank-aware migration (ISSUE 8): the simulator scores every
+        # candidate scheme's replan by credited residual ETA instead of
+        # taking the policy's nominal-time pick
+        yield (f"flaky_providers_n{n}_{pol}_bankmig",
+               dataclasses.replace(sc, carryover=True, migration=True,
+                                   bank_aware_migration=True), pol)
     # plan-vs-reality robustness column (ISSUE 6): silent brownouts
     # (stragglers) and stale/noisy capacity estimates (foggy_estimates),
     # each with mitigation off (the injections alone) and on
@@ -148,7 +229,7 @@ def _trace_config(name: str, sc, pol: str, params, seed: int,
                                           f"{name}.trace.json"))
 
 
-def run(root_seed: int = 0, trace: bool = False):
+def run(root_seed: int = 0, trace: bool = False, clusters: int = 0):
     quick = quick_mode()
     params = _params()
     rows, configs = [], {}
@@ -171,12 +252,61 @@ def run(root_seed: int = 0, trace: bool = False):
             f"mig={summary['migrations']:.0f} "
             f"saved={summary['work_saved_fraction']:.2f} "
             f"plan_err={summary['plan_err_mean']:.2f}"))
+    # region-scale ensemble rows: K clusters in lockstep, pooled summary
+    # plus cluster-bootstrap CIs.  Deterministic like every config row —
+    # the bootstrap rng is seeded from the config seed.
+    for name, sc, pol, k in _ensemble_rows(quick, clusters):
+        seed = _config_seed(root_seed, name)
+        t0 = time.perf_counter()
+        ens = ClusterEnsemble(sc, lambda p=pol: make_policy(p), params,
+                              clusters=k, root_seed=seed)
+        ens.run()
+        wall = time.perf_counter() - t0
+        summary = ens.pooled().summary()
+        assert math.isfinite(summary["mean_backlog"]), name
+        cis = ens.cis(ENSEMBLE_CI_KEYS, n_boot=200, seed=seed)
+        configs[name] = dict(summary, clusters=k,
+                             cis={key: list(v) for key, v in cis.items()})
+        events = max(summary["completed"] + summary["aborted"], 1)
+        lo, mid, hi = cis["mean_backlog"]
+        rows.append(row(
+            f"fleet/{name}", wall / events * 1e6,
+            f"K={k} backlog={mid:.3f} [{lo:.3f},{hi:.3f}] "
+            f"p99={summary['regen_p99']:.3f}s "
+            f"vuln_p99={summary['vulnerability_p99']:.3f}s"))
+    # event-loop throughput section: wall clock by design, so it lives
+    # OUTSIDE ``configs`` (that section stays bitwise reproducible) and is
+    # guarded by check_fleet_perf.py instead of the golden
+    perf = {}
+    for name, sc, pol in _perf_rows():
+        seed = _config_seed(root_seed, name)
+        best = None
+        for _ in range(PERF_REPEATS):
+            sim = FleetSimulator(sc, make_policy(pol), params, seed=seed)
+            t0 = time.perf_counter()
+            sim.run()
+            wall = time.perf_counter() - t0
+            if best is None or wall < best[0]:
+                best = (wall, sim.loop_events)
+        wall, events = best
+        us = wall / events * 1e6
+        pr7 = PR7_US_PER_EVENT[name]
+        perf[name] = {
+            "us_per_event": us,
+            "loop_events": events,
+            "pr7_us_per_event": pr7,
+            "speedup_vs_pr7": pr7 / us,
+        }
+        rows.append(row(f"fleet_perf/{name}", us,
+                        f"events={events} pr7={pr7:.1f}us/ev "
+                        f"speedup={pr7 / us:.2f}x"))
     artifact = {
         "schema_version": BENCH_SCHEMA_VERSION,
         "meta": run_meta(root_seed, sweep="quick" if quick else "full"),
         "quick": quick,
         "root_seed": root_seed,
         "configs": configs,
+        "perf": perf,
     }
     # strict JSON: `Infinity` is not JSON — sanitize non-finite floats
     # (quiet scenarios' mttdl_estimate) to null and forbid the literal
@@ -197,11 +327,15 @@ def main() -> None:
     ap.add_argument("--trace", action="store_true",
                     help="also re-run each config with the flight recorder "
                          "on and write benchmarks/artifacts/traces/")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="override K for the ensemble rows (0 = per-row "
+                         "defaults)")
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
-    for r in run(root_seed=args.seed, trace=args.trace):
+    for r in run(root_seed=args.seed, trace=args.trace,
+                 clusters=args.clusters):
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     path = os.path.join(REPO_ROOT, "BENCH_fleet.json")
     assert os.path.exists(path), "BENCH_fleet.json was not written"

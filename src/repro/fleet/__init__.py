@@ -12,6 +12,8 @@ single-repair Monte Carlo cannot produce.  See src/README.md for the
 architecture and ``benchmarks/fleet_scale.py`` for the sweep driver.
 """
 from .cluster import ClusterState, FAILED, HEALTHY, REPAIRING
+from .ensemble import (ClusterEnsemble, bootstrap_cis, cluster_seed,
+                       pool_metrics)
 from .events import Event, EventQueue
 from .metrics import FleetMetrics
 from .policy import FixedPolicy, FlexiblePolicy, RepairPolicy, make_policy
@@ -23,11 +25,12 @@ from .sharing import ActiveRepair, LinkShareModel, apply_credit, plan_links
 from .sim import FleetSimulator, QueuedRepair, simulate
 
 __all__ = [
-    "ActiveRepair", "ClusterState", "Event", "EventQueue", "FAILED",
-    "FleetMetrics", "FleetSimulator", "FixedPolicy", "FlexiblePolicy",
-    "HEALTHY", "LinkShareModel", "QueuedRepair", "REPAIRING",
-    "RepairPolicy", "SCENARIOS", "Scenario", "apply_credit",
-    "capacity_weather", "flaky_providers", "foggy_estimates", "hot_reads",
-    "make_policy", "mitigated", "plan_links", "rack_bursts", "simulate",
+    "ActiveRepair", "ClusterEnsemble", "ClusterState", "Event",
+    "EventQueue", "FAILED", "FleetMetrics", "FleetSimulator",
+    "FixedPolicy", "FlexiblePolicy", "HEALTHY", "LinkShareModel",
+    "QueuedRepair", "REPAIRING", "RepairPolicy", "SCENARIOS", "Scenario",
+    "apply_credit", "bootstrap_cis", "capacity_weather", "cluster_seed",
+    "flaky_providers", "foggy_estimates", "hot_reads", "make_policy",
+    "mitigated", "plan_links", "pool_metrics", "rack_bursts", "simulate",
     "steady", "stragglers", "tiered", "tiered_capacities",
 ]

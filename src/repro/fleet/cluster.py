@@ -23,7 +23,7 @@ state are deliberately separate — this class only answers "who is up".
 """
 from __future__ import annotations
 
-from typing import List, Set
+from typing import List, Optional, Set
 
 import numpy as np
 
@@ -44,6 +44,14 @@ class ClusterState:
         self.n = caps.shape[0]
         self.rack_size = rack_size
         self.state = np.zeros(self.n, dtype=np.int8)
+        # incremental health bookkeeping (ISSUE 8): the healthy count and
+        # membership only change on fail / complete_repair (start/abort
+        # toggle FAILED <-> REPAIRING, both unhealthy), so both are kept
+        # as caches invalidated exactly there instead of rescanning
+        # ``state`` on every event epoch
+        self._num_healthy = self.n
+        self._healthy_list: Optional[List[int]] = None
+        self._healthy_set: Optional[Set[int]] = None
 
     # -- placement ----------------------------------------------------------
 
@@ -60,25 +68,38 @@ class ClusterState:
     # -- health -------------------------------------------------------------
 
     def healthy_nodes(self) -> List[int]:
-        return [int(x) for x in np.flatnonzero(self.state == HEALTHY)]
+        """Ascending healthy slot ids (cached; treat as read-only)."""
+        if self._healthy_list is None:
+            self._healthy_list = [
+                int(x) for x in np.flatnonzero(self.state == HEALTHY)]
+        return self._healthy_list
 
     def healthy_set(self) -> Set[int]:
         """Same membership as :meth:`healthy_nodes`, O(1) lookups — for
-        filtering surviving providers and torn-down read endpoints."""
-        return set(self.healthy_nodes())
+        filtering surviving providers and torn-down read endpoints
+        (cached; treat as read-only)."""
+        if self._healthy_set is None:
+            self._healthy_set = set(self.healthy_nodes())
+        return self._healthy_set
 
     @property
     def num_healthy(self) -> int:
-        return int((self.state == HEALTHY).sum())
+        return self._num_healthy
 
     @property
     def num_unavailable(self) -> int:
-        return self.n - self.num_healthy
+        return self.n - self._num_healthy
+
+    def _health_changed(self, delta: int) -> None:
+        self._num_healthy += delta
+        self._healthy_list = None
+        self._healthy_set = None
 
     def fail(self, node: int) -> None:
         if self.state[node] != HEALTHY:
             raise ValueError(f"node {node} is not healthy")
         self.state[node] = FAILED
+        self._health_changed(-1)
 
     def start_repair(self, node: int) -> None:
         if self.state[node] != FAILED:
@@ -94,3 +115,4 @@ class ClusterState:
         if self.state[node] != REPAIRING:
             raise ValueError(f"node {node} is not under repair")
         self.state[node] = HEALTHY
+        self._health_changed(+1)

@@ -75,6 +75,20 @@ class RepairPolicy:
         """
         return self.plan_batch(caps, params)
 
+    def replan_candidates(self, caps: np.ndarray, params: CodeParams,
+                          ) -> List[List[Optional[RepairPlan]]]:
+        """All replacement-plan candidates per in-flight repair, for
+        bank-aware migration (``Scenario.bank_aware_migration``, ISSUE 8).
+
+        Where :meth:`replan` pre-picks one proposal per repair — by
+        nominal time, blind to banked work — this returns the full slate
+        so the *simulator* can score each candidate by credited residual
+        ETA and prefer trees overlapping already-received blocks.  The
+        default slate is the single :meth:`replan` proposal; policies
+        with a real scheme race override it.
+        """
+        return [[p] for p in self.replan(caps, params)]
+
 
 class FixedPolicy(RepairPolicy):
     """Always the same scheme (any name in the scheme registry).
@@ -122,6 +136,16 @@ class FlexiblePolicy(RepairPolicy):
         times = np.array([[p.time for p in plans] for plans in per_scheme])
         winner = np.argmin(times, axis=0)       # first minimum wins ties
         return [per_scheme[int(winner[r])][r] for r in range(caps.shape[0])]
+
+    def replan_candidates(self, caps: np.ndarray, params: CodeParams,
+                          ) -> List[List[Optional[RepairPlan]]]:
+        """One candidate per scheme per repair, in scheme-preference order
+        (so bank-aware scoring ties break toward the earlier scheme,
+        matching :meth:`plan_batch`'s determinism)."""
+        per_scheme = [plans_from_batch(plan_many(caps, params, s), params)
+                      for s in self.schemes]
+        return [[plans[r] for plans in per_scheme]
+                for r in range(caps.shape[0])]
 
 
 def make_policy(spec: str) -> RepairPolicy:

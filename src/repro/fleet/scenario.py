@@ -95,6 +95,12 @@ class Scenario:
     #                                   aborts; credit them at re-admission
     migration: bool = False           # offer in-flight repairs a re-plan at
     #                                   capacity-shock / provider-loss epochs
+    bank_aware_migration: bool = False    # score every candidate replan by
+    #                                   *credited* residual ETA (banked
+    #                                   blocks subtracted) instead of taking
+    #                                   the policy's nominal-time pick —
+    #                                   prefers trees overlapping
+    #                                   already-banked links (ISSUE 8)
     # -- plan-vs-reality robustness (ISSUE 6; everything OFF by default:
     #    the default path reproduces the pre-robustness dynamics bitwise) --
     estimate_noise: float = 0.0       # relative noise on each believed

@@ -44,6 +44,31 @@ silent link brownouts (stragglers/stalls) — :meth:`share` and
 view stays oblivious.  Both default to off (``believed=None`` aliases the
 true matrix, ``out_mult=None`` skips the multiply), which keeps the default
 path bitwise identical to the pre-robustness model.
+
+Incremental sharing engine (ISSUE 8): :meth:`recompute` no longer rescans
+every active repair on every event.  The model keeps a link -> repairs
+index (populated by passing ``repair=`` to :meth:`acquire` /
+:meth:`release`) and a set of *touched* links — links whose user count
+changed since the last recompute, plus links invalidated by capacity
+changes (:meth:`invalidate_all` for in-place matrix rescales,
+:meth:`invalidate_source` for per-node brownout multiplier flips).  A
+recompute then refreshes only the repairs occupying a touched link.  This
+is bitwise identical to the full rescan because a repair's nominal
+duration is a pure function of (its residual links, the true capacities,
+the per-link user counts): if none of those inputs changed, recomputing
+would reproduce the exact same float.  The full rescan survives two ways:
+as the automatic fallback whenever the index cannot be trusted (callers
+that never register repairs, e.g. the closed-form tests), and as a debug
+oracle behind ``LinkShareModel(caps, check=True)``, which re-derives every
+nominal from scratch after each incremental update and asserts bitwise
+equality (tests/test_sharing_incremental.py drives random
+arrival/departure/brownout/shock sequences through it).
+
+The occupancy ledger is also mirrored into a dense ``users_mat`` array so
+:meth:`residual_overlay` / :meth:`residual_overlays` are single gather +
+divide array programs over repairs x links instead of per-entry Python
+loops (``x / 1.0`` is IEEE-exact, so dividing untouched entries by one is
+bitwise identical to not dividing them).
 """
 from __future__ import annotations
 
@@ -100,7 +125,7 @@ def apply_credit(flows: Sequence[Tuple[Link, float]],
     return out, credited, total
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ActiveRepair:
     """A regeneration in flight, with per-plan-edge progress state.
 
@@ -230,15 +255,37 @@ class LinkShareModel:
     utilization/contention timelines are integrated online.  ``None``
     (default) skips the calls — the share arithmetic itself is never
     touched, so tracing cannot perturb a run.
+
+    Incremental recompute (ISSUE 8): callers that pass ``repair=`` to
+    :meth:`acquire` / :meth:`release` opt into delta recomputes — only
+    repairs occupying a link whose user count (or effective capacity, via
+    :meth:`invalidate_all` / :meth:`invalidate_source`) changed since the
+    last :meth:`recompute` get their nominal refreshed.  Callers that
+    never register fall back to the full rescan automatically.
+    ``check=True`` keeps the incremental path but re-derives every nominal
+    from scratch after each recompute and asserts bitwise equality — the
+    debug oracle the property tests drive.
     """
 
     def __init__(self, caps: np.ndarray,
-                 believed: Optional[np.ndarray] = None):
+                 believed: Optional[np.ndarray] = None,
+                 check: bool = False):
         self.caps = caps
         self.believed = believed
         self.out_mult: Optional[np.ndarray] = None
         self.tracer = None
+        self.check = check
         self.users: Dict[Link, int] = {}
+        # dense mirror of ``users`` for the vectorized overlay gathers;
+        # int64 keeps ``m + 1.0`` exact for any realistic user count
+        self.users_mat = np.zeros(caps.shape, dtype=np.int64)
+        # -- incremental-recompute index (ISSUE 8) --------------------------
+        self._by_link: Dict[Link, Dict[int, ActiveRepair]] = {}
+        self._reg: Dict[int, ActiveRepair] = {}         # all registered
+        self._unlinked: Dict[int, ActiveRepair] = {}    # registered, no
+        #                                                 residual links
+        self._touched: set = set()      # links whose users/capacity changed
+        self._all_touched = True        # capacities unseen yet: full scan
 
     def true_cap(self, link: Link) -> float:
         """Actual capacity of ``link`` right now (brownouts applied)."""
@@ -252,22 +299,78 @@ class LinkShareModel:
         mat = self.caps if self.believed is None else self.believed
         return float(mat[link])
 
-    def acquire(self, links: Sequence[Tuple[Link, float]]) -> None:
+    def acquire(self, links: Sequence[Tuple[Link, float]],
+                repair: Optional[ActiveRepair] = None) -> None:
+        """Claim one occupancy unit per link.  Passing the owning
+        ``repair`` registers it in the link -> repairs index so the next
+        :meth:`recompute` can refresh only affected repairs; anonymous
+        flows (degraded reads) still mark their links touched."""
+        users = self.users
+        mat = self.users_mat
+        touched = self._touched
+        tracer = self.tracer
         for link, _ in links:
-            m = self.users.get(link, 0) + 1
-            self.users[link] = m
-            if self.tracer is not None:
-                self.tracer.on_users(link, m)
-
-    def release(self, links: Sequence[Tuple[Link, float]]) -> None:
-        for link, _ in links:
-            m = self.users.get(link, 0) - 1
-            if m > 0:
-                self.users[link] = m
+            m = users.get(link, 0) + 1
+            users[link] = m
+            mat[link] = m
+            touched.add(link)
+            if tracer is not None:
+                tracer.on_users(link, m)
+        if repair is not None:
+            key = id(repair)
+            self._reg[key] = repair
+            if links:
+                for link, _ in links:
+                    self._by_link.setdefault(link, {})[key] = repair
             else:
-                self.users.pop(link, None)
-            if self.tracer is not None:
-                self.tracer.on_users(link, max(m, 0))
+                # a fully-prepaid plan occupies nothing but still needs its
+                # (zero) nominal set by the next recompute
+                self._unlinked[key] = repair
+
+    def release(self, links: Sequence[Tuple[Link, float]],
+                repair: Optional[ActiveRepair] = None) -> None:
+        users = self.users
+        mat = self.users_mat
+        touched = self._touched
+        tracer = self.tracer
+        for link, _ in links:
+            m = users.get(link, 0) - 1
+            if m > 0:
+                users[link] = m
+                mat[link] = m
+            else:
+                users.pop(link, None)
+                mat[link] = 0
+            touched.add(link)
+            if tracer is not None:
+                tracer.on_users(link, max(m, 0))
+        if repair is not None:
+            key = id(repair)
+            self._reg.pop(key, None)
+            self._unlinked.pop(key, None)
+            for link, _ in links:
+                d = self._by_link.get(link)
+                if d is not None:
+                    d.pop(key, None)
+                    if not d:
+                        del self._by_link[link]
+
+    # -- capacity-change invalidation (ISSUE 8) -----------------------------
+
+    def invalidate_all(self) -> None:
+        """Every effective capacity may have changed (the simulator
+        rescaled ``caps`` in place): the next :meth:`recompute` falls back
+        to the full rescan."""
+        self._all_touched = True
+
+    def invalidate_source(self, node: int) -> None:
+        """``node``'s outgoing effective rates changed (brownout applied
+        or lifted): mark its occupied outgoing links touched so their
+        repairs get re-shared at the next :meth:`recompute`."""
+        touched = self._touched
+        for link in self._by_link:
+            if link[0] == node:
+                touched.add(link)
 
     def share(self, link: Link) -> float:
         """Bandwidth each current occupant of ``link`` receives."""
@@ -294,20 +397,56 @@ class LinkShareModel:
         Reads the *believed* matrix when one is set — this is the
         planner's map, not the territory (``sim.py`` keeps them apart when
         estimate error is injected).
+
+        One gather + one divide over the dense ``users_mat`` mirror
+        (entries with no users divide by exactly 1.0, which is IEEE-exact,
+        so the result is bitwise identical to the per-entry loop this
+        replaced).
         """
         idx = np.asarray(ids)
         mat = self.caps if self.believed is None else self.believed
         cap = mat[np.ix_(idx, idx)].copy()
+        m = self.users_mat[np.ix_(idx, idx)].astype(np.float64)
+        if exclude:
+            pos = {int(u): i for i, u in enumerate(idx)}
+            for (u, v) in exclude:
+                i = pos.get(u)
+                j = pos.get(v)
+                if i is not None and j is not None and m[i, j] > 0:
+                    m[i, j] -= 1.0
+        cap /= np.where(m > 0, m + 1.0, 1.0)
         np.fill_diagonal(cap, 0.0)
-        for i, u in enumerate(idx):
-            for j, v in enumerate(idx):
-                if i != j:
-                    link = (int(u), int(v))
-                    m = self.users.get(link, 0)
-                    if link in exclude and m:
-                        m -= 1
-                    if m:
-                        cap[i, j] /= (m + 1)
+        return cap
+
+    def residual_overlays(self, ids_list: Sequence[Sequence[int]],
+                          excludes: Optional[Sequence[frozenset]] = None,
+                          ) -> np.ndarray:
+        """Stacked ``(R, d+1, d+1)`` residual overlays, one row per
+        candidate repair — the batched form of :meth:`residual_overlay`
+        the simulator feeds to ``policy.plan_batch`` / ``policy.replan``.
+        All id tuples must share one fan-out (the simulator groups
+        admissions and replans by d); ``excludes[r]``, when given,
+        discounts repair r's own claims exactly like the scalar method.
+        Bitwise identical to stacking R scalar calls."""
+        idx = np.asarray(ids_list)
+        mat = self.caps if self.believed is None else self.believed
+        rows = idx[:, :, None]
+        cols = idx[:, None, :]
+        cap = mat[rows, cols].astype(np.float64, copy=True)
+        m = self.users_mat[rows, cols].astype(np.float64)
+        if excludes is not None:
+            for r, excl in enumerate(excludes):
+                if not excl:
+                    continue
+                pos = {int(u): i for i, u in enumerate(idx[r])}
+                for (u, v) in excl:
+                    i = pos.get(u)
+                    j = pos.get(v)
+                    if i is not None and j is not None and m[r, i, j] > 0:
+                        m[r, i, j] -= 1.0
+        cap /= np.where(m > 0, m + 1.0, 1.0)
+        w = cap.shape[1]
+        cap[:, np.arange(w), np.arange(w)] = 0.0
         return cap
 
     def admission_time(self, links: Sequence[Tuple[Link, float]],
@@ -317,34 +456,86 @@ class LinkShareModel:
         ``exclude`` = an in-flight repair's current links, this is the
         migrated-plan ETA the simulator compares against ``eta()``.  A
         *prediction*, so it reads the believed matrix when one is set."""
+        mat = self.caps if self.believed is None else self.believed
+        users = self.users
         t = 0.0
         for link, f in links:
             if f <= FLOW_EPS:
                 continue
-            c = self.believed_cap(link)
-            m = self.users.get(link, 0)
+            c = float(mat[link])
+            m = users.get(link, 0)
             if link in exclude and m:
                 m -= 1
             s = c / (m + 1)
             if s <= 0.0:
                 return math.inf
-            t = max(t, f / s)
+            tl = f / s
+            if tl > t:
+                t = tl
         return t
 
     def nominal_time(self, links: Sequence[Tuple[Link, float]]) -> float:
-        """Store-and-forward duration of a plan at the current shares."""
+        """Store-and-forward duration of a plan at the current shares.
+
+        Same arithmetic as ``max(f / self.share(link))`` with the
+        attribute lookups hoisted — this is the recompute hot loop."""
+        caps = self.caps
+        om = self.out_mult
+        users = self.users
         t = 0.0
         for link, f in links:
             if f <= FLOW_EPS:
                 continue
-            s = self.share(link)
+            c = float(caps[link])
+            if om is not None:
+                c *= float(om[link[0]])
+            m = users.get(link, 0)
+            if m > 1:
+                s = c / m
+            else:
+                s = c
             if s <= 0.0:
                 return math.inf
-            t = max(t, f / s)
+            tl = f / s
+            if tl > t:
+                t = tl
         return t
 
     def recompute(self, active: Sequence[ActiveRepair]) -> None:
-        """Refresh every active repair's nominal duration (call after any
-        arrival, departure, or capacity change)."""
-        for r in active:
-            r.nominal = self.nominal_time(r.links)
+        """Refresh active repairs' nominal durations (call after any
+        arrival, departure, or capacity change).
+
+        When every repair in ``active`` is registered (the simulator's
+        path), only repairs occupying a *touched* link are refreshed — a
+        repair none of whose links changed users or capacity would
+        recompute to the bit-identical float, so skipping it is exact.
+        Unregistered callers (or a global invalidation) get the full
+        rescan.  With ``check=True`` a full rescan shadows every
+        incremental result and asserts bitwise equality."""
+        if self._all_touched or len(self._reg) != len(active):
+            for r in active:
+                r.nominal = self.nominal_time(r.links)
+            self._all_touched = False
+            self._touched.clear()
+            return
+        touched = self._touched
+        if touched:
+            by_link = self._by_link
+            seen: set = set()
+            nominal_time = self.nominal_time
+            for link in touched:
+                d = by_link.get(link)
+                if d:
+                    for key, r in d.items():
+                        if key not in seen:
+                            seen.add(key)
+                            r.nominal = nominal_time(r.links)
+            touched.clear()
+        for r in self._unlinked.values():
+            r.nominal = self.nominal_time(r.links)      # == 0.0 always
+        if self.check:
+            for r in active:
+                want = self.nominal_time(r.links)
+                assert r.nominal == want, (
+                    f"incremental recompute diverged for repair of slot "
+                    f"{r.node}: incremental={r.nominal!r} full={want!r}")

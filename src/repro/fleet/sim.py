@@ -141,7 +141,8 @@ class FleetSimulator:
     """Simulate ``scenario`` under ``policy`` for one (n, k, d) code."""
 
     def __init__(self, scenario: Scenario, policy: RepairPolicy,
-                 params: CodeParams, seed: int = 0):
+                 params: CodeParams, seed: int = 0,
+                 check_shares: bool = False):
         if params.d > scenario.num_nodes - 1:
             raise ValueError(
                 f"d={params.d} providers need a cluster of > d nodes, "
@@ -158,7 +159,10 @@ class FleetSimulator:
                           dtype=np.float64)
         self.cluster = ClusterState(base, rack_size=scenario.rack_size)
         self.caps_base = self.cluster.caps.copy()
-        self.shares = LinkShareModel(self.cluster.caps)
+        # check_shares=True shadows every incremental share recompute with
+        # the full-rescan oracle and asserts bitwise equality (slow; for
+        # tests/debugging only)
+        self.shares = LinkShareModel(self.cluster.caps, check=check_shares)
 
         # -- flight recorder (ISSUE 7): allocated only when asked for, and
         #    every emission site is guarded, so the default path runs the
@@ -180,8 +184,17 @@ class FleetSimulator:
         self.queue: List[QueuedRepair] = []         # fail-time-ordered FIFO
         self.active: List[ActiveRepair] = []        # kept in start order
         self.reads: dict = {}
+        self._reads_at: Dict[int, set] = {}     # node -> rids touching it
+        self._indexed_rids: set = set()         # rids present in _reads_at
         self._read_seq = 0
         self._replan_pending = False
+        self.loop_events = 0        # event epochs processed (perf metric)
+        # (next event time, completion time, completion index, heap time)
+        # cached by _refresh_pending after every step — this is what the
+        # lockstep ensemble driver reads through next_event_time()
+        self._pending: Tuple[float, float, int, float] = \
+            (math.inf, math.inf, -1, math.inf)
+        self._started = False
 
         # -- straggler/stall injection: per-node outgoing-rate multipliers.
         #    None (no degrade machinery configured) keeps the share model's
@@ -286,6 +299,7 @@ class FleetSimulator:
         generation counter."""
         assert self.degrade is not None
         self.degrade[node] = factor
+        self.shares.invalidate_source(node)
         self._degrade_gen[node] += 1
         self.events.push(Event(self.now + duration, RECOVER,
                                (node, self._degrade_gen[node])))
@@ -306,6 +320,7 @@ class FleetSimulator:
     def _recover(self, node: int, gen: int) -> None:
         if self.degrade is not None and self._degrade_gen[node] == gen:
             self.degrade[node] = 1.0
+            self.shares.invalidate_source(node)
             if self.recorder is not None:
                 self.recorder.emit(self.now, "node_recover", node=node)
 
@@ -358,16 +373,27 @@ class FleetSimulator:
                                reason="fail")
         # tear down degraded reads touching the failed node: their links
         # must not linger as phantom flows until the scheduled departure
-        # (the stale READ_DEPARTURE becomes a no-op when it fires)
-        dead_reads = [rid for rid, links in self.reads.items()
-                      if any(node in link for link, _ in links)]
+        # (the stale READ_DEPARTURE becomes a no-op when it fires).  The
+        # node -> rids index replaces the all-reads scan; sorting restores
+        # the arrival (dict insertion) order the scan released in.  Reads
+        # injected directly into ``self.reads`` (tests craft these) bypass
+        # the index, so fall back to the scan unless it covers every read
+        if len(self._indexed_rids) == len(self.reads):
+            dead_reads = sorted(self._reads_at.get(node, ()))
+        else:
+            dead_reads = [rid for rid, links in self.reads.items()
+                          if any(node in link for link, _ in links)]
         for rid in dead_reads:
-            self.shares.release(self.reads.pop(rid))
-        # abort in-flight repairs that lost a provider
-        lost = [i for i, r in enumerate(self.active) if node in r.providers]
+            links = self.reads.pop(rid)
+            self.shares.release(links)
+            self._unindex_read(rid, links)
+        # abort in-flight repairs that lost a provider.  node is healthy
+        # until this failure while every r.ids[0] slot is REPAIRING, so
+        # membership in ids is membership in the providers tail
+        lost = [i for i, r in enumerate(self.active) if node in r.ids]
         for i in reversed(lost):
             r = self.active.pop(i)
-            self.shares.release(r.links)
+            self.shares.release(r.links, r)
             self.cluster.abort_repair(r.node)
             if self.scenario.carryover:
                 # keep blocks already received — except those parked at the
@@ -406,7 +432,9 @@ class FleetSimulator:
     def _poisson_failure(self) -> None:
         healthy = self.cluster.healthy_nodes()
         if healthy:
-            victim = int(self.rng["fail"].choice(len(healthy)))
+            # integers(0, n) consumes the identical stream draw as the
+            # uniform scalar choice(n) it replaces, minus its array setup
+            victim = int(self.rng["fail"].integers(0, len(healthy)))
             victims = [healthy[victim]]
             sc = self.scenario
             if (sc.rack_size > 0 and sc.rack_burst_prob > 0
@@ -439,16 +467,20 @@ class FleetSimulator:
         healthy = self.cluster.healthy_nodes()
         fanin = sc.read_fanin or self.params.k
         if self.cluster.num_unavailable > 0 and len(healthy) > fanin:
-            dst_i = int(self.rng["read"].choice(len(healthy)))
+            dst_i = int(self.rng["read"].integers(0, len(healthy)))  # == choice(n)
             dst = healthy[dst_i]
-            pool = [h for h in healthy if h != dst]
-            idx = self.rng["read"].choice(len(pool), size=fanin,
+            # index remap stands in for the dst-excluding pool listcomp:
+            # pool[i] == healthy[i] for i < dst_i else healthy[i + 1],
+            # so the rng draw below sees the identical pool size
+            idx = self.rng["read"].choice(len(healthy) - 1, size=fanin,
                                           replace=False)
-            links = [((pool[int(i)], dst), 1.0) for i in idx]
+            links = [((healthy[j if j < dst_i else j + 1], dst), 1.0)
+                     for j in (int(i) for i in idx)]
             self.shares.acquire(links)
             rid = self._read_seq
             self._read_seq += 1
             self.reads[rid] = links
+            self._index_read(rid, links)
             self.events.push(Event(self.now + sc.read_duration,
                                    READ_DEPARTURE, (rid,)))
         self.events.push(Event(
@@ -459,6 +491,25 @@ class FleetSimulator:
         links = self.reads.pop(rid, None)
         if links is not None:
             self.shares.release(links)
+            self._unindex_read(rid, links)
+
+    def _index_read(self, rid: int, links) -> None:
+        at = self._reads_at
+        for (src, dst), _ in links:
+            at.setdefault(src, set()).add(rid)
+            at.setdefault(dst, set()).add(rid)
+        self._indexed_rids.add(rid)
+
+    def _unindex_read(self, rid: int, links) -> None:
+        at = self._reads_at
+        for (src, dst), _ in links:
+            s = at.get(src)
+            if s is not None:
+                s.discard(rid)
+            s = at.get(dst)
+            if s is not None:
+                s.discard(rid)
+        self._indexed_rids.discard(rid)
 
     # -- repair admission ---------------------------------------------------
 
@@ -484,7 +535,9 @@ class FleetSimulator:
         deficit = d - len(keep)
         if not deficit:
             return keep
-        pool = [h for h in healthy if h not in keep]
+        # no survivors (the common case): healthy itself is the pool
+        # (read-only cached list, never mutated here)
+        pool = healthy if not keep else [h for h in healthy if h not in keep]
         if avoid:
             trimmed = [h for h in pool if h not in avoid]
             if len(trimmed) >= deficit:
@@ -505,6 +558,8 @@ class FleetSimulator:
         again for the rest of the queue; with no dead overlays (the normal
         case) exactly one batched planning call is made per epoch.
         """
+        if not self.queue:
+            return              # nothing admissible: skip the batch setup
         deferred: List[QueuedRepair] = []
         sc = self.scenario
         while True:
@@ -558,9 +613,8 @@ class FleetSimulator:
             plans: list = [None] * len(startable)
             for d_eff in sorted(by_d):
                 rows = by_d[d_eff]
-                overlays = np.stack([
-                    self.shares.residual_overlay(startable[i][1])
-                    for i in rows])
+                overlays = self.shares.residual_overlays(
+                    [startable[i][1] for i in rows])
                 got = self.policy.plan_batch(overlays, startable[rows[0]][2])
                 for i, plan in zip(rows, got):
                     plans[i] = plan
@@ -585,15 +639,16 @@ class FleetSimulator:
                 # at its own admission instant — the realized duration is
                 # measured against it (plan-error distribution)
                 predicted = self.shares.admission_time(links)
-                self.shares.acquire(links)
-                if len(ids) - 1 < self.params.d:
-                    self.metrics.on_degraded_admission()
-                self.active.append(ActiveRepair(
+                r = ActiveRepair(
                     node=q.node, plan=plan, ids=list(ids), links=links,
                     fail_time=q.fail_time, start_time=self.now, bank=bank,
                     plan_t0=self.now, predicted=predicted,
                     retries=q.retries, next_check=q.next_check,
-                    avoid=q.avoid, rid=q.rid))
+                    avoid=q.avoid, rid=q.rid)
+                self.shares.acquire(links, r)
+                if len(ids) - 1 < self.params.d:
+                    self.metrics.on_degraded_admission()
+                self.active.append(r)
                 if self.recorder is not None:
                     self.recorder.emit(
                         self.now, "repair_admitted", rid=q.rid, node=q.node,
@@ -622,7 +677,16 @@ class FleetSimulator:
         same-epoch snapshot: an accepted migration changes the shares its
         successors are judged under (we recompute between accepts), but the
         overlays the policy planned against are not re-stacked.
+
+        With ``Scenario.bank_aware_migration`` on (ISSUE 8) the policy
+        returns *every* candidate plan per repair
+        (``replan_candidates``) and the simulator picks the one
+        minimizing the banked-credited ETA, so a tree overlapping
+        already-received blocks can beat the nominally-fastest tree.  Off
+        (default) the single ``replan`` proposal goes through the same
+        scoring, which degenerates to the pre-ISSUE-8 accept test bitwise.
         """
+        bank_aware = self.scenario.bank_aware_migration
         groups: Dict[int, List[ActiveRepair]] = {}
         for r in self.active:
             groups.setdefault(len(r.ids) - 1, []).append(r)
@@ -630,24 +694,25 @@ class FleetSimulator:
             params_eff = (self.params if d_eff == self.params.d else
                           dataclasses.replace(self.params, d=d_eff))
             group = groups[d_eff]
-            overlays = np.stack([
-                self.shares.residual_overlay(
-                    r.ids, exclude=frozenset(l for l, _ in r.links))
-                for r in group])
-            proposals = self.policy.replan(overlays, params_eff)
-            for r, plan in zip(group, proposals):
-                if plan is None or not math.isfinite(plan.time):
+            overlays = self.shares.residual_overlays(
+                [r.ids for r in group],
+                excludes=[frozenset(l for l, _ in r.links) for r in group])
+            if bank_aware:
+                cand_lists = self.policy.replan_candidates(overlays,
+                                                           params_eff)
+            else:
+                cand_lists = [[p] for p in
+                              self.policy.replan(overlays, params_eff)]
+            for r, plans in zip(group, cand_lists):
+                best = self._best_candidate(r, plans)
+                if best is None:
                     continue
-                bank = r.banked_now()
-                links, credited, total = apply_credit(
-                    plan_links(plan, r.ids), bank)
-                occupied = frozenset(l for l, _ in r.links)
-                eta_new = self.shares.admission_time(links, exclude=occupied)
+                plan, links, bank, credited, total, eta_new = best
                 if eta_new >= r.eta():
                     continue
-                self.shares.release(r.links)
+                self.shares.release(r.links, r)
                 r.rebase(plan, links, bank)
-                self.shares.acquire(r.links)
+                self.shares.acquire(r.links, r)
                 r.plan_t0 = self.now
                 r.predicted = eta_new
                 self.metrics.on_migration(credited, total)
@@ -657,6 +722,28 @@ class FleetSimulator:
                                        scheme=plan.scheme, credited=credited,
                                        total=total, predicted=eta_new)
                 self.shares.recompute(self.active)
+
+    def _best_candidate(self, r: ActiveRepair, plans: Sequence,
+                        ) -> Optional[tuple]:
+        """Score replacement-plan candidates for in-flight repair ``r`` by
+        *credited* ETA under self-excluded shares — banked blocks are
+        subtracted from each candidate's demands first, so overlap with
+        already-received work counts for exactly what it saves.  Returns
+        the winning ``(plan, links, bank, credited, total, eta)`` or
+        ``None``; the first minimum wins ties (candidate order is the
+        policy's scheme preference), keeping the choice deterministic."""
+        occupied = frozenset(l for l, _ in r.links)
+        bank = r.banked_now()
+        best = None
+        for plan in plans:
+            if plan is None or not math.isfinite(plan.time):
+                continue
+            links, credited, total = apply_credit(
+                plan_links(plan, r.ids), bank)
+            eta = self.shares.admission_time(links, exclude=occupied)
+            if best is None or eta < best[5]:
+                best = (plan, links, bank, credited, total, eta)
+        return best
 
     # -- watchdog: plan-vs-reality mitigation -------------------------------
 
@@ -733,18 +820,22 @@ class FleetSimulator:
                       dataclasses.replace(self.params, d=d_eff))
         occupied = frozenset(l for l, _ in r.links)
         overlay = self.shares.residual_overlay(r.ids, exclude=occupied)
-        proposals = self.policy.replan(overlay[None, ...], params_eff)
-        plan = proposals[0] if proposals else None
-        if plan is None or not math.isfinite(plan.time):
+        if self.scenario.bank_aware_migration:
+            cands = self.policy.replan_candidates(overlay[None, ...],
+                                                  params_eff)
+            plans = cands[0] if cands else []
+        else:
+            proposals = self.policy.replan(overlay[None, ...], params_eff)
+            plans = [proposals[0]] if proposals else []
+        best = self._best_candidate(r, plans)
+        if best is None:
             return
-        bank = r.banked_now()
-        links, credited, total = apply_credit(plan_links(plan, r.ids), bank)
-        eta_new = self.shares.admission_time(links, exclude=occupied)
+        plan, links, bank, credited, total, eta_new = best
         if eta_new >= r.eta():
             return
-        self.shares.release(r.links)
+        self.shares.release(r.links, r)
         r.rebase(plan, links, bank)
-        self.shares.acquire(r.links)
+        self.shares.acquire(r.links, r)
         r.plan_t0 = self.now
         r.predicted = eta_new
         self.metrics.on_watchdog_replan(credited, total)
@@ -775,7 +866,7 @@ class FleetSimulator:
         if worst_link is None:              # no evictable residual links
             return
         straggler = worst_link[0]
-        self.shares.release(r.links)
+        self.shares.release(r.links, r)
         self.active.remove(r)
         self.cluster.abort_repair(r.node)
         bank = {link: b for link, b in r.banked_now().items()
@@ -799,18 +890,38 @@ class FleetSimulator:
     def _next_completion(self) -> Tuple[float, int]:
         """(absolute time, index into self.active) of the earliest finishing
         repair; on ties the strict < keeps the first hit, and ``active`` is
-        in start order, so the earliest-started repair wins."""
+        in start order, so the earliest-started repair wins.  ``eta`` is
+        inlined — this scan runs every event epoch."""
         best_t, best_i = math.inf, -1
+        now = self.now
         for i, r in enumerate(self.active):
-            t = self.now + r.eta()
+            rem = r.remaining
+            t = now + rem * r.nominal if rem > 0.0 else now
             if t < best_t:
                 best_t, best_i = t, i
         return best_t, best_i
 
     def _advance(self, t: float) -> None:
         dt = t - self.now
-        for r in self.active:
-            r.advance(dt)
+        # inlined ActiveRepair.advance (same arithmetic, pinned by the
+        # goldens): only a finite positive nominal accrues progress, and a
+        # zero nominal (degenerate all-tiny-flow plan) finishes outright
+        if dt < 0:
+            raise ValueError(f"negative time step {dt}")
+        if dt == 0.0:
+            # same-epoch advance: rem - 0.0/nom == rem bitwise, so only the
+            # degenerate zero-nominal finish-outright branch has any effect
+            for r in self.active:
+                if r.nominal == 0.0:
+                    r.remaining = 0.0
+        else:
+            for r in self.active:
+                nom = r.nominal
+                if nom > 0.0 and nom != math.inf:
+                    rem = r.remaining - dt / nom
+                    r.remaining = rem if rem > 0.0 else 0.0
+                elif nom == 0.0:
+                    r.remaining = 0.0
         self.now = t
         self.metrics.observe(t, len(self.queue) + len(self.active),
                              self.cluster.num_unavailable)
@@ -820,7 +931,7 @@ class FleetSimulator:
         if self.recorder is not None:
             self._emit_complete(r)          # before releasing the links
         r.remaining = 0.0
-        self.shares.release(r.links)
+        self.shares.release(r.links, r)
         self.cluster.complete_repair(r.node)
         self.metrics.on_complete(r.fail_time, r.start_time, self.now,
                                  r.plan_t0, r.predicted)
@@ -828,70 +939,111 @@ class FleetSimulator:
         # (memorylessness makes the re-draw exact, same as on failures)
         self.next_fail = self._draw_next_fail()
 
-    def run(self) -> FleetMetrics:
-        end = self.scenario.duration
+    def _refresh_pending(self) -> None:
+        """Cache (next event time, completion time, completion index, heap
+        time) for the next :meth:`step`.  Nothing can change simulator
+        state between the end of one step and the start of the next, so
+        computing this once per step (instead of at the top of each loop
+        iteration) is exact — and it is what exposes
+        :meth:`next_event_time` to the lockstep ensemble driver without
+        re-scanning the active set."""
+        t_comp, ci = self._next_completion()
+        t_exo = self.events.peek_time()
+        t_next = min(t_comp, t_exo, self.next_fail, self.next_degrade)
+        self._pending = (t_next, t_comp, ci, t_exo)
+
+    def next_event_time(self) -> float:
+        """Absolute time of the next event epoch (``inf`` when idle) —
+        valid after :meth:`start` and between :meth:`step` calls.  The
+        ensemble driver keys its lockstep heap on this."""
+        return self._pending[0]
+
+    def start(self) -> None:
+        """Prime the loop: t=0 observation, initial admissions, shares.
+        Idempotent guard so ``run()`` after a manual ``start()`` works."""
+        if self._started:
+            return
+        self._started = True
         self.metrics.observe(0.0, len(self.queue) + len(self.active),
                              self.cluster.num_unavailable)
         self._drain_queue()
         self.shares.recompute(self.active)
-        while True:
-            t_comp, ci = self._next_completion()
-            t_exo = self.events.peek_time()
-            t_next = min(t_comp, t_exo, self.next_fail, self.next_degrade)
-            if t_next > end or not math.isfinite(t_next):
-                self._advance(end)
-                break
-            self._advance(t_next)
-            # fixed same-time precedence: completion, heap, Poisson failure
-            # clock, Poisson degrade clock
-            if (t_comp <= t_exo and t_comp <= self.next_fail
-                    and t_comp <= self.next_degrade):
-                self._complete(ci)
-            elif t_exo <= self.next_fail and t_exo <= self.next_degrade:
-                ev = self.events.pop()
-                if ev.kind == FAILURE:
-                    if self._apply_failure(ev.payload[0]):
-                        # redraw only when the healthy population actually
-                        # changed; a redundant injection must not shift the
-                        # Poisson stream (memorylessness keeps the old draw
-                        # exact when the rate is unchanged)
-                        self.next_fail = self._draw_next_fail()
-                elif ev.kind == CAPACITY_SHOCK:
-                    self._capacity_shock()
-                elif ev.kind == READ_ARRIVAL:
-                    self._read_arrival()
-                elif ev.kind == READ_DEPARTURE:
-                    self._read_departure(ev.payload[0])
-                elif ev.kind == DEGRADE:
-                    self._apply_degrade(*ev.payload)
-                elif ev.kind == RECOVER:
-                    self._recover(*ev.payload)
-                elif ev.kind == ESTIMATE_REFRESH:
-                    self._refresh_estimates()
-                    self.events.push(Event(
-                        self.now + self.scenario.estimate_refresh_period,
-                        ESTIMATE_REFRESH))
-                elif ev.kind == WATCHDOG:
-                    self._watchdog()
-            elif self.next_fail <= self.next_degrade:
-                self._poisson_failure()
-            else:
-                self._poisson_degrade()
-            if (self._estimates_on
-                    and self.scenario.estimate_refresh_period == 0):
-                # period 0 = perfectly fresh (but still noisy) estimates:
-                # re-snapshot every epoch so the noise alone is the error
+        self._refresh_pending()
+
+    def step(self) -> bool:
+        """Process one event epoch; returns False once the horizon is
+        reached (the final advance to ``duration`` has then been made).
+        ``run()`` is ``start(); while step(): pass`` — the split lets the
+        ensemble driver interleave many simulators in lockstep."""
+        end = self.scenario.duration
+        t_next, t_comp, ci, t_exo = self._pending
+        if t_next > end or not math.isfinite(t_next):
+            self._advance(end)
+            return False
+        self.loop_events += 1
+        self._advance(t_next)
+        # fixed same-time precedence: completion, heap, Poisson failure
+        # clock, Poisson degrade clock
+        if (t_comp <= t_exo and t_comp <= self.next_fail
+                and t_comp <= self.next_degrade):
+            self._complete(ci)
+        elif t_exo <= self.next_fail and t_exo <= self.next_degrade:
+            ev = self.events.pop()
+            if ev.kind == FAILURE:
+                if self._apply_failure(ev.payload[0]):
+                    # redraw only when the healthy population actually
+                    # changed; a redundant injection must not shift the
+                    # Poisson stream (memorylessness keeps the old draw
+                    # exact when the rate is unchanged)
+                    self.next_fail = self._draw_next_fail()
+            elif ev.kind == CAPACITY_SHOCK:
+                self._capacity_shock()
+                # a shock epoch rewrites the capacity matrix in place —
+                # overridden shocks (tests subclass the hook) included, so
+                # the invalidation lives at the dispatch site, not inside
+                # the default implementation
+                self.shares.invalidate_all()
+            elif ev.kind == READ_ARRIVAL:
+                self._read_arrival()
+            elif ev.kind == READ_DEPARTURE:
+                self._read_departure(ev.payload[0])
+            elif ev.kind == DEGRADE:
+                self._apply_degrade(*ev.payload)
+            elif ev.kind == RECOVER:
+                self._recover(*ev.payload)
+            elif ev.kind == ESTIMATE_REFRESH:
                 self._refresh_estimates()
-            if self._replan_pending:
-                self._replan_pending = False
-                if self.scenario.migration and self.active:
-                    self.shares.recompute(self.active)
-                    self._maybe_replan()
-            self._drain_queue()
-            self.shares.recompute(self.active)
-            self.metrics.observe(self.now,
-                                 len(self.queue) + len(self.active),
-                                 self.cluster.num_unavailable)
+                self.events.push(Event(
+                    self.now + self.scenario.estimate_refresh_period,
+                    ESTIMATE_REFRESH))
+            elif ev.kind == WATCHDOG:
+                self._watchdog()
+        elif self.next_fail <= self.next_degrade:
+            self._poisson_failure()
+        else:
+            self._poisson_degrade()
+        if (self._estimates_on
+                and self.scenario.estimate_refresh_period == 0):
+            # period 0 = perfectly fresh (but still noisy) estimates:
+            # re-snapshot every epoch so the noise alone is the error
+            self._refresh_estimates()
+        if self._replan_pending:
+            self._replan_pending = False
+            if self.scenario.migration and self.active:
+                self.shares.recompute(self.active)
+                self._maybe_replan()
+        self._drain_queue()
+        self.shares.recompute(self.active)
+        self.metrics.observe(self.now,
+                             len(self.queue) + len(self.active),
+                             self.cluster.num_unavailable)
+        self._refresh_pending()
+        return True
+
+    def finish(self) -> FleetMetrics:
+        """Close the books after the last :meth:`step` and return the
+        metrics — the third piece of the start/step/finish loop split
+        the ensemble driver composes."""
         if self.recorder is not None:
             # close the books: exact link aggregates and the legacy summary
             # ride in the trace header, so one file is self-contained
@@ -899,6 +1051,12 @@ class FleetSimulator:
             self.recorder.meta["links"] = self.link_tracer.snapshot()
             self.recorder.meta["summary"] = self.metrics.summary()
         return self.metrics
+
+    def run(self) -> FleetMetrics:
+        self.start()
+        while self.step():
+            pass
+        return self.finish()
 
 
 def simulate(scenario: Scenario, policy: RepairPolicy, params: CodeParams,

@@ -36,6 +36,7 @@ from __future__ import annotations
 import collections
 import json
 import math
+import warnings
 from typing import Any, Dict, Iterable, List, Optional
 
 SCHEMA_VERSION = 1
@@ -89,6 +90,16 @@ class FlightRecorder:
     def emit(self, t: float, ev: str, **attrs: Any) -> None:
         """Record one event at simulated time ``t`` seconds."""
         if len(self._events) == self.capacity:
+            if self.dropped == 0:
+                # warn once at the first wrap: from here the timeline is a
+                # suffix, so a consumer replaying "the whole run" should
+                # know the head is gone (the header still counts exactly
+                # how many events fell off)
+                warnings.warn(
+                    f"FlightRecorder ring buffer wrapped at capacity "
+                    f"{self.capacity}; oldest events are being dropped "
+                    f"(see the 'dropped_events' header field)",
+                    RuntimeWarning, stacklevel=2)
             self.dropped += 1
         e = {"t": float(t), "ev": ev}
         e.update(attrs)
@@ -108,6 +119,10 @@ class FlightRecorder:
             "kind": TRACE_KIND,
             "capacity": self.capacity,
             "dropped": self.dropped,
+            # explicit alias: "dropped" reads ambiguously (dropped what?);
+            # consumers should prefer this key, the old one stays for
+            # check_trace.py and any external reader already shipped
+            "dropped_events": self.dropped,
             "events": len(self._events),
             "meta": self.meta,
         })

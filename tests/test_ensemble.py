@@ -1,0 +1,136 @@
+"""Lockstep multi-cluster ensemble (ISSUE 8): parity, pooling, CIs.
+
+Three contracts:
+
+* **member parity** — interleaving K simulators through the lockstep
+  heap must not perturb any of them: every member's metrics equal the
+  solo ``run()`` at the same derived seed, bitwise;
+* **pooling closed forms** — ``pool_metrics`` sums time integrals /
+  counters and concatenates samples, so the pooled ``summary()`` ratios
+  have hand-computable values on crafted members;
+* **bootstrap CIs** — deterministic in the seed, bracket the point
+  estimate, and collapse to zero width on an ensemble of identical
+  members (every resample is the same multiset).
+"""
+import math
+
+import pytest
+
+from repro.core import CodeParams
+from repro.fleet import (ClusterEnsemble, FleetMetrics, FleetSimulator,
+                         Scenario, bootstrap_cis, cluster_seed,
+                         make_policy, pool_metrics)
+from repro.fleet.scenario import uniform_matrix
+
+PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+
+
+def _scenario(duration=200.0):
+    return Scenario(num_nodes=20, duration=duration, failure_rate=1e-2,
+                    capacity_model=uniform_matrix(0.3, 6.0),
+                    max_concurrent=6, read_rate=0.5, read_duration=15.0)
+
+
+def test_members_match_solo_runs_bitwise():
+    sc = _scenario()
+    ens = ClusterEnsemble(sc, lambda: make_policy("star"), PARAMS,
+                          clusters=3, root_seed=11)
+    members = ens.run()
+    assert len(members) == 3
+    for k, m in enumerate(members):
+        solo = FleetSimulator(sc, make_policy("star"), PARAMS,
+                              seed=cluster_seed(11, k)).run()
+        assert m.summary() == solo.summary(), f"member {k} diverged"
+
+
+def test_cluster_seed_distinct_and_stable():
+    seeds = [cluster_seed(5, k) for k in range(64)]
+    assert len(set(seeds)) == 64
+    # member k's trajectory is independent of ensemble size
+    assert cluster_seed(5, 3) == seeds[3]
+    assert all(0 <= s < (1 << 31) for s in seeds)
+
+
+def _crafted(now, backlog_integral, completed, regen, max_backlog,
+             expected_losses=0.0):
+    m = FleetMetrics(n=8, k=2, failure_rate=1e-3)
+    m.now = now
+    m.backlog_integral = backlog_integral
+    m.completed = completed
+    m.regen_times = list(regen)
+    m.max_backlog = max_backlog
+    m.expected_losses = expected_losses
+    return m
+
+
+def test_pooling_closed_forms():
+    a = _crafted(now=10.0, backlog_integral=20.0, completed=2,
+                 regen=[1.0, 3.0], max_backlog=4, expected_losses=0.5)
+    b = _crafted(now=30.0, backlog_integral=30.0, completed=3,
+                 regen=[5.0, 7.0, 9.0], max_backlog=2,
+                 expected_losses=1.5)
+    s = pool_metrics([a, b]).summary()
+    assert s["duration"] == 40.0                     # durations sum
+    assert s["mean_backlog"] == 50.0 / 40.0          # Σ∫b dt / Σdur
+    assert s["completed"] == 5                       # counters sum
+    assert s["max_backlog"] == 4                     # high-water mark: max
+    assert s["regen_mean"] == 5.0                    # concat then mean
+    assert s["regen_p50"] == 5.0
+    assert s["expected_data_losses"] == 2.0
+    assert s["mttdl_estimate"] == 40.0 / 2.0         # Σdur / ΣE[losses]
+
+
+def test_pooling_zero_losses_gives_inf_mttdl():
+    a = _crafted(10.0, 0.0, 0, [], 0)
+    s = pool_metrics([a, a]).summary()
+    assert s["mttdl_estimate"] == math.inf
+
+
+def test_pool_empty_rejected():
+    with pytest.raises(ValueError):
+        pool_metrics([])
+    with pytest.raises(ValueError):
+        bootstrap_cis([], ["mean_backlog"])
+
+
+def test_identical_members_zero_width_ci():
+    m = FleetSimulator(_scenario(), make_policy("star"), PARAMS,
+                       seed=cluster_seed(2, 0)).run()
+    cis = bootstrap_cis([m, m, m, m], ["mean_backlog", "regen_p50"],
+                        n_boot=50, seed=9)
+    for lo, point, hi in cis.values():
+        assert lo == point == hi
+
+
+def test_bootstrap_deterministic_and_brackets_point():
+    sc = _scenario()
+    ens = ClusterEnsemble(sc, lambda: make_policy("star"), PARAMS,
+                          clusters=4, root_seed=13)
+    members = ens.run()
+    keys = ["mean_backlog", "regen_p50", "unavail_fraction"]
+    a = bootstrap_cis(members, keys, n_boot=80, seed=1)
+    b = bootstrap_cis(members, keys, n_boot=80, seed=1)
+    c = bootstrap_cis(members, keys, n_boot=80, seed=2)
+    assert a == b                          # seeded: bitwise repeatable
+    assert a != c                          # and the seed actually matters
+    for lo, point, hi in a.values():
+        assert lo <= hi
+        assert math.isfinite(point)
+    # pooled point estimate == pooling by hand
+    assert a["mean_backlog"][1] == pool_metrics(members).summary()[
+        "mean_backlog"]
+
+
+def test_ensemble_pooled_and_cis_lazy_run():
+    """`pooled()` / `cis()` before `run()` drive the ensemble once."""
+    ens = ClusterEnsemble(_scenario(120.0), lambda: make_policy("star"),
+                          PARAMS, clusters=2, root_seed=3)
+    pooled = ens.pooled()
+    assert ens.members is not None
+    assert pooled.now == sum(m.now for m in ens.members)
+
+
+def test_ensemble_rejects_empty():
+    with pytest.raises(ValueError):
+        ClusterEnsemble(_scenario(), lambda: make_policy("star"), PARAMS,
+                        clusters=0)

@@ -179,11 +179,14 @@ def test_abort_keeps_rid_across_readmission():
 
 def test_ring_buffer_drops_oldest_and_still_exports():
     sc = SCENARIOS["steady"](16, failure_rate=4e-3, duration=1500.0)
-    sim, metrics = _traced(sc, FixedPolicy("fr"), trace_capacity=8)
+    with pytest.warns(RuntimeWarning, match="ring buffer wrapped"):
+        sim, metrics = _traced(sc, FixedPolicy("fr"), trace_capacity=8)
     rec = sim.recorder
     assert len(rec) <= 8
     assert rec.dropped > 0
     assert rec.header()["dropped"] == rec.dropped
+    # the explicit alias consumers should prefer (ISSUE 8)
+    assert rec.header()["dropped_events"] == rec.dropped
     # both exports stay valid strict JSON despite missing span begins
     for line in rec.to_jsonl().splitlines():
         json.loads(line)
@@ -191,6 +194,18 @@ def test_ring_buffer_drops_oldest_and_still_exports():
     # and the purity invariant survives the tiny buffer
     untraced = simulate(sc, FixedPolicy("fr"), PARAMS, seed=0)
     assert metrics.summary() == untraced
+
+
+def test_ring_wrap_warns_exactly_once():
+    rec = FlightRecorder(capacity=2)
+    with pytest.warns(RuntimeWarning) as record:
+        for i in range(10):
+            rec.emit(float(i), "x")
+    wraps = [w for w in record
+             if "ring buffer wrapped" in str(w.message)]
+    assert len(wraps) == 1, "wrap warning must fire once, not per drop"
+    assert rec.dropped == 8
+    assert rec.header()["dropped_events"] == 8
 
 
 def test_zero_capacity_rejected():

@@ -1,0 +1,198 @@
+"""Incremental sharing engine (ISSUE 8): delta updates == full recompute.
+
+The engine's contract is exact: a repair's nominal time is a pure function
+of (residual links, true capacities, per-link user counts), so an
+incremental ``recompute`` that only revisits repairs touching invalidated
+links must land on bit-for-bit the nominals a full rescan computes.
+``LinkShareModel(check=True)`` asserts exactly that after every
+incremental pass — these tests drive randomized arrival / departure /
+brownout / shock walks through a checked model (a seeded deterministic
+sweep always runs; hypothesis widens it when installed), and run a whole
+simulator under ``check_shares=True`` across the scenario knobs that
+exercise every invalidation path.
+
+The bank-aware migration satellite rides along: candidate-slate plumbing
+(``RepairPolicy.replan_candidates``) and the off-by-default knob are
+pinned here; the on/off *dynamics* split shows up in BENCH_fleet.json's
+``..._bankmig`` row, and the off path staying bitwise is the golden
+guard's job.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import CodeParams
+from repro.fleet import (ActiveRepair, FixedPolicy, FlexiblePolicy,
+                         FleetSimulator, LinkShareModel, Scenario,
+                         make_policy)
+from repro.fleet.scenario import uniform_matrix
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal local env; CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+PARAMS = CodeParams.msr(n=12, k=3, d=6, M=600.0)
+
+
+def _repair(node, links):
+    return ActiveRepair(node=node, plan=None, ids=[node], links=links,
+                        fail_time=0.0, start_time=0.0)
+
+
+def _walk_checked_model(seed: int, steps: int = 120) -> None:
+    """Random op walk through a check-mode model.  Every ``recompute``
+    self-verifies the incremental nominals against a full rescan and
+    raises on the first mismatch."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    caps = rng.uniform(0.5, 4.0, size=(n, n))
+    np.fill_diagonal(caps, 0.0)
+    model = LinkShareModel(caps, check=True)
+    active = []
+    reads = []
+    for stepno in range(steps):
+        op = int(rng.integers(0, 8))
+        if op <= 1 or not active:
+            # repair arrival (sometimes fully prepaid: empty links, which
+            # only the _unlinked registry keeps alive)
+            dst = int(rng.integers(0, n))
+            d = int(rng.integers(0, 5))
+            srcs = rng.choice([x for x in range(n) if x != dst],
+                              size=d, replace=False)
+            links = [((int(s), dst), float(rng.uniform(0.1, 1.0)))
+                     for s in srcs]
+            r = _repair(dst, links)
+            model.acquire(links, r)
+            active.append(r)
+        elif op == 2:
+            i = int(rng.integers(0, len(active)))
+            r = active.pop(i)
+            model.release(r.links, r)
+        elif op == 3:
+            # unregistered read traffic on top
+            a, b = rng.choice(n, size=2, replace=False)
+            links = [((int(a), int(b)), 1.0)]
+            model.acquire(links)
+            reads.append(links)
+        elif op == 4 and reads:
+            model.release(reads.pop(int(rng.integers(0, len(reads)))))
+        elif op == 5:
+            # brownout: one source's outgoing row changes
+            node = int(rng.integers(0, n))
+            model.caps[node, :] *= float(rng.uniform(0.5, 1.5))
+            model.caps[node, node] = 0.0
+            model.invalidate_source(node)
+        elif op == 6:
+            # capacity shock: the whole matrix changes
+            model.caps[:] = rng.uniform(0.5, 4.0, size=(n, n))
+            np.fill_diagonal(model.caps, 0.0)
+            model.invalidate_all()
+        # op == 7: pure recompute epoch (nothing touched — the
+        # incremental pass must be a no-op that still verifies)
+        model.recompute(active)
+        for r in active:
+            assert math.isfinite(r.nominal) or r.nominal == math.inf
+            if not r.links:
+                assert r.nominal == 0.0, "prepaid repair must stay at 0"
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_incremental_matches_full_recompute_sweep(seed):
+    """Seeded deterministic walk: incremental == full rescan, bitwise."""
+    _walk_checked_model(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_incremental_matches_full_recompute_property(seed):
+        """Property form of the walk (wider random family)."""
+        _walk_checked_model(seed, steps=60)
+
+
+def test_checked_simulator_full_knobs():
+    """A simulator under ``check_shares=True`` exercises every
+    invalidation site (admission, completion, abort, reads, shocks,
+    brownouts, migration replans) with the oracle comparing after each
+    recompute — and its metrics equal the unchecked run's bitwise."""
+    sc = Scenario(num_nodes=16, duration=250.0, failure_rate=8e-3,
+                  capacity_model=uniform_matrix(0.3, 6.0),
+                  max_concurrent=6, read_rate=0.5, read_duration=20.0,
+                  shock_period=60.0, shock_lo=0.5, shock_hi=1.5,
+                  carryover=True, migration=True,
+                  degrade_rate=2e-2, degrade_mean_duration=15.0,
+                  degrade_lo=0.3, degrade_hi=0.8)
+    args = (sc, make_policy("flexible"), PARAMS)
+    checked = FleetSimulator(*args, seed=3, check_shares=True).run()
+    plain = FleetSimulator(*args, seed=3).run()
+    assert checked.summary() == plain.summary()
+    assert checked.completed > 0
+
+
+def test_checked_model_catches_stale_nominals():
+    """The oracle must actually bite: mutate capacities WITHOUT
+    invalidating and the next registered-repair recompute asserts."""
+    caps = np.full((4, 4), 2.0)
+    np.fill_diagonal(caps, 0.0)
+    model = LinkShareModel(caps, check=True)
+    r = _repair(0, [((1, 0), 1.0)])
+    model.acquire(r.links, r)
+    model.recompute([r])            # clean first pass
+    model.caps[1, 0] = 0.5          # stale: no invalidate_source(1)
+    with pytest.raises(AssertionError):
+        model.recompute([r])
+
+
+# -- bank-aware migration satellite -----------------------------------------
+
+def test_replan_candidates_default_is_single_proposal():
+    """The base slate is exactly the one ``replan`` proposal per row."""
+    pol = FixedPolicy("star")
+    caps = np.full((2, PARAMS.d + 1, PARAMS.d + 1), 3.0)
+    for c in caps:
+        np.fill_diagonal(c, 0.0)
+    slate = pol.replan_candidates(caps, PARAMS)
+    proposals = pol.replan(caps, PARAMS)
+    assert len(slate) == 2
+    for cands, p in zip(slate, proposals):
+        assert len(cands) == 1
+        assert cands[0].time == p.time
+        assert cands[0].scheme == p.scheme
+
+
+def test_flexible_replan_candidates_race_all_schemes():
+    """The flexible slate is one candidate per scheme, in preference
+    order, covering every registered candidate scheme."""
+    pol = FlexiblePolicy()
+    caps = np.full((3, PARAMS.d + 1, PARAMS.d + 1), 3.0)
+    for c in caps:
+        np.fill_diagonal(c, 0.0)
+    slate = pol.replan_candidates(caps, PARAMS)
+    assert len(slate) == 3
+    for cands in slate:
+        assert [p.scheme for p in cands] == list(pol.schemes)
+
+
+def test_bank_aware_migration_runs_and_default_off():
+    """The knob defaults off; flipping it on yields a valid run (its
+    bitwise-off guarantee is the fleet golden's job, exercised in
+    BENCH_fleet.json's ``..._bankmig`` row)."""
+    assert Scenario(num_nodes=8, duration=1.0).bank_aware_migration is False
+    sc = Scenario(num_nodes=16, duration=300.0, failure_rate=8e-3,
+                  capacity_model=uniform_matrix(0.3, 6.0),
+                  max_concurrent=6, shock_period=40.0,
+                  shock_lo=0.4, shock_hi=1.4,
+                  carryover=True, migration=True)
+    on = dataclasses.replace(sc, bank_aware_migration=True)
+    m_off = FleetSimulator(sc, make_policy("flexible"), PARAMS, seed=5).run()
+    m_on = FleetSimulator(on, make_policy("flexible"), PARAMS,
+                          seed=5, check_shares=True).run()
+    assert m_on.completed > 0 and m_off.completed > 0
+    # same failure injections either way: the knob only changes which
+    # replacement plan an in-flight migration adopts
+    assert m_on.completed + m_on.aborted > 0
