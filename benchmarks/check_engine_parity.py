@@ -1,0 +1,176 @@
+"""CI cross-engine guard: the jax planning tier must match the NumPy
+engines on seeded instances.
+
+Usage:
+
+    python benchmarks/check_engine_parity.py [--mode warn|fail]
+
+Plans a grid of seeded overlay batches (MSR and interior-alpha operating
+points, several d/k shapes) with every jax-capable scheme on all three
+engines and compares:
+
+* ``parents`` — bitwise equal (tree topology is discrete; any divergence
+  is a real algorithmic drift, not float noise),
+* ``star`` times — bitwise equal (pure min/max/divide data flow, where
+  float64 jit permits exactness),
+* everything else (times/traffic/betas/lower_bounds of fr/tr/ftr, star
+  traffic) — relative error <= 1e-9.  The jax kernels run the same
+  float64 recurrences in the same order, but XLA may re-associate
+  reductions (e.g. the traffic sum), which permits ~1-ulp differences;
+  measured drift is ~1e-14, so 1e-9 has five orders of headroom while
+  still catching any use of a different formula.
+
+The jax engine is additionally tied to the *scalar* oracle on a row
+subset, so this guard transitively covers jax -> batched -> scalar.
+
+Under GITHUB_ACTIONS the guard also asserts that the checked-in
+``BENCH_planning.json`` meta records a non-dirty git state: a clean CI
+checkout recording "-dirty" means metadata was resolved after the run's
+own artifact writes (the bug fixed by resolving git state at
+``benchmarks.common`` import) or that generated files were not committed.
+
+``--mode warn`` (pull requests) prints GitHub warning annotations and
+exits 0; ``--mode fail`` (pushes to main) exits 1 on any mismatch.
+Exits 0 with a notice when jax is not importable (the tier is optional by
+design — the registry then declares ``jax=None`` everywhere).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+REL_TOL = 1e-9          # documented cross-engine float tolerance
+SCALAR_ROWS = 3         # rows per config tied directly to the scalar oracle
+
+# (d, k, B, msr): small shapes keep per-shape jit compilation (the cost
+# driver on CI) in the seconds range while still covering k=d, interior
+# alpha, and a non-power-of-two batch that exercises the padding path.
+CONFIGS = [
+    (4, 2, 7, True),
+    (4, 4, 5, False),
+    (6, 3, 16, True),
+    (6, 3, 9, False),
+]
+
+
+def _overlays(rng, B, d):
+    caps = rng.uniform(10.0, 120.0, size=(B, d + 1, d + 1))
+    idx = np.arange(d + 1)
+    caps[:, idx, idx] = 0.0
+    return caps
+
+
+def _params(d, k, msr):
+    from repro.core import CodeParams, mbr_point
+    M = 600.0
+    if msr:
+        return CodeParams.msr(n=d + 2, k=k, d=d, M=M)
+    a_mbr, _ = mbr_point(M, k, d)
+    return CodeParams(n=d + 2, k=k, d=d, M=M, alpha=0.5 * (M / k + a_mbr))
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a, dtype=float), np.asarray(b, dtype=float)
+    both_inf = np.isinf(a) & np.isinf(b) & (np.sign(a) == np.sign(b))
+    diff = np.where(both_inf, 0.0, np.abs(a - b))
+    scale = np.maximum(1.0, np.abs(np.where(both_inf, 0.0, a)))
+    return float((diff / scale).max()) if diff.size else 0.0
+
+
+def _check_dirty_meta(problems):
+    path = os.path.join(REPO_ROOT, "BENCH_planning.json")
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        git = (json.load(f).get("meta") or {}).get("git")
+    if git and git.endswith("-dirty"):
+        problems.append(
+            f"BENCH_planning.json meta records git={git!r} on a CI "
+            f"checkout: benchmark metadata must capture a clean tree "
+            f"(resolve git state before artifact writes / commit "
+            f"generated files)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("warn", "fail"), default="warn")
+    args = ap.parse_args()
+
+    problems: list = []
+    if os.environ.get("GITHUB_ACTIONS") == "true":
+        _check_dirty_meta(problems)
+
+    from repro.core import plan_many, scheme_names
+    from repro.core.api import get_scheme
+
+    jax_capable = scheme_names(jax=True)
+    if not jax_capable:
+        print("engine parity: jax not importable here; nothing to check "
+              "(the registry declares jax=None for every scheme)")
+        return _report(problems, args.mode)
+
+    checked = 0
+    for d, k, B, msr in CONFIGS:
+        params = _params(d, k, msr)
+        rng = np.random.default_rng([d, k, B, int(msr), 0xE191])
+        caps = _overlays(rng, B, d)
+        label = f"d={d} k={k} B={B} {'msr' if msr else 'interior'}"
+        for scheme in jax_capable:
+            rb = plan_many(caps, params, scheme, engine="batched")
+            rj = plan_many(caps, params, scheme, engine="jax")
+            rs = plan_many(caps[:SCALAR_ROWS], params, scheme,
+                           engine="scalar")
+
+            def bad(msg):
+                problems.append(f"{label} {scheme}: {msg}")
+
+            if not (rj.parents == rb.parents).all():
+                bad("parents differ from batched engine (must be bitwise)")
+            if not (rj.parents[:SCALAR_ROWS] == rs.parents).all():
+                bad("parents differ from scalar oracle (must be bitwise)")
+            if scheme == "star":
+                if not (rj.times == rb.times).all():
+                    bad(f"star times not bitwise equal "
+                        f"(max rel err {_rel_err(rb.times, rj.times):.3e})")
+            else:
+                e = _rel_err(rb.times, rj.times)
+                if e > REL_TOL:
+                    bad(f"times rel err {e:.3e} > {REL_TOL:g}")
+            for field in ("traffic", "betas", "lower_bounds"):
+                vb, vj = getattr(rb, field), getattr(rj, field)
+                if vb is None and vj is None:
+                    continue
+                e = _rel_err(vb, vj)
+                if e > REL_TOL:
+                    bad(f"{field} rel err {e:.3e} > {REL_TOL:g}")
+            e = _rel_err(rs.times, rj.times[:SCALAR_ROWS])
+            if e > REL_TOL:
+                bad(f"times vs scalar oracle rel err {e:.3e} > {REL_TOL:g}")
+            checked += 1
+    spec_caps = {s: get_scheme(s).jax is not None for s in scheme_names()}
+    print(f"engine parity: {checked} (config, scheme) pairs checked over "
+          f"{len(CONFIGS)} configs; jax-capable schemes: "
+          f"{[s for s, ok in spec_caps.items() if ok]}")
+    return _report(problems, args.mode)
+
+
+def _report(problems, mode) -> int:
+    if not problems:
+        print("engine parity OK")
+        return 0
+    for msg in problems:
+        marker = "warning" if mode == "warn" else "error"
+        print(f"::{marker} title=engine parity::{msg}")
+    print(f"engine parity: {len(problems)} problem(s)")
+    return 1 if mode == "fail" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_SCHEMA_VERSION = 2
 
 
-def git_describe() -> Optional[str]:
+def _git_describe_now() -> Optional[str]:
     """``git describe --always --dirty --tags`` of the repo, or None when
     git is unavailable (e.g. an sdist run) — metadata only, never fatal."""
     try:
@@ -27,6 +27,31 @@ def git_describe() -> Optional[str]:
         return out.stdout.strip() or None if out.returncode == 0 else None
     except Exception:
         return None
+
+
+# Resolved eagerly at import — i.e. before any benchmark module rewrites a
+# git-TRACKED artifact (BENCH_*.json, benchmarks/artifacts/*.json).  The
+# old call-at-summary-time behavior ran git *after* those writes, so even a
+# perfectly clean CI checkout recorded "git": "...-dirty" in its own meta —
+# the run dirtied the tree itself.  Capturing the state of the *code* that
+# produced the run, not of the artifacts it wrote, is the whole point of
+# the field.  benchmarks/check_engine_parity.py asserts non-dirty under CI.
+_GIT_DESCRIBE_AT_IMPORT = _git_describe_now()
+
+
+def git_describe() -> Optional[str]:
+    """Git state of the checkout *as of benchmark start* (import time),
+    before the run's own artifact writes can dirty the tree."""
+    return _GIT_DESCRIBE_AT_IMPORT
+
+
+def bench_engine() -> str:
+    """Planning engine for the fig6/7/8 drivers (``BENCH_ENGINE`` /
+    ``--engine``): "batched" (default — the golden-pinned configuration),
+    "scalar", or "jax" for the jit-compiled tier.  Non-default engines are
+    for A/B measurement; the golden plan values are only pinned for the
+    default."""
+    return os.environ.get("BENCH_ENGINE", "batched")
 
 
 def run_meta(seed: int, **extra: Any) -> Dict[str, Any]:

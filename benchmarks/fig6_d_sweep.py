@@ -10,7 +10,8 @@ from __future__ import annotations
 from repro.core import CodeParams, scheme_names
 from repro.storage import compare_schemes, uniform
 
-from .common import quick_mode, row, save_artifact, timed_best_of
+from .common import (bench_engine, quick_mode, row, save_artifact,
+                     timed_best_of)
 
 N, K, M_BLOCKS = 20, 5, 8000.0  # 1 GB in 1-Mb blocks
 # registry-driven: every scheme with a batched planner (star/fr/tr/ftr +
@@ -26,13 +27,20 @@ def run():
     ds = [6, 10, 15, 19] if quick else list(range(K + 1, N))
     rows, artifact = [], {"params": {"n": N, "k": K, "M": M_BLOCKS,
                                      "trials": trials}, "points": []}
-    # untimed warm-up: numpy/scipy one-time initialization out of row 1
-    compare_schemes(CodeParams.msr(n=N, k=K, d=ds[0], M=M_BLOCKS), uniform(),
-                    SCHEMES, 2, seed=0)
+    engine = bench_engine()
+    # untimed warm-up: numpy/scipy one-time initialization out of row 1.
+    # The jax engine compiles one executable per (batch, d) shape, so its
+    # warm-up must visit every d at the *timed* batch size — compilation
+    # is a one-time cost and stays out of the measured rows.
+    for d in ds if engine == "jax" else ds[:1]:
+        compare_schemes(CodeParams.msr(n=N, k=K, d=d, M=M_BLOCKS), uniform(),
+                        SCHEMES, trials if engine == "jax" else 2, seed=0,
+                        engine=engine)
     for d in ds:
         p = CodeParams.msr(n=N, k=K, d=d, M=M_BLOCKS)
         stats, secs = timed_best_of(
-            lambda: compare_schemes(p, uniform(), SCHEMES, trials, seed=42 + d))
+            lambda: compare_schemes(p, uniform(), SCHEMES, trials,
+                                    seed=42 + d, engine=engine))
         point = {"d": d}
         for s in SCHEMES:
             st = stats[s]

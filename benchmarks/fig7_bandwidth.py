@@ -8,7 +8,8 @@ from __future__ import annotations
 from repro.core import CodeParams, scheme_names
 from repro.storage import FIG7_DISTRIBUTIONS, compare_schemes
 
-from .common import quick_mode, row, save_artifact, timed_best_of
+from .common import (bench_engine, quick_mode, row, save_artifact,
+                     timed_best_of)
 
 N, K, D, M_BLOCKS = 20, 5, 10, 8000.0
 SCHEMES = scheme_names(batched=True)   # registry-driven scheme column
@@ -20,12 +21,15 @@ def run():
     p = CodeParams.msr(n=N, k=K, d=D, M=M_BLOCKS)
     rows, artifact = [], {"params": {"n": N, "k": K, "d": D, "M": M_BLOCKS,
                                      "trials": trials}, "points": []}
-    # untimed warm-up: one-time initialization out of the first row
-    compare_schemes(p, next(iter(FIG7_DISTRIBUTIONS.values())), SCHEMES, 2,
-                    seed=0)
+    engine = bench_engine()
+    # untimed warm-up: one-time initialization out of the first row (at the
+    # timed batch size under jax — one executable per (batch, d) shape)
+    compare_schemes(p, next(iter(FIG7_DISTRIBUTIONS.values())), SCHEMES,
+                    trials if engine == "jax" else 2, seed=0, engine=engine)
     for dist_name, sampler in FIG7_DISTRIBUTIONS.items():
         stats, secs = timed_best_of(
-            lambda: compare_schemes(p, sampler, SCHEMES, trials, seed=7))
+            lambda: compare_schemes(p, sampler, SCHEMES, trials, seed=7,
+                                    engine=engine))
         point = {"distribution": dist_name}
         for s in SCHEMES:
             st = stats[s]

@@ -9,7 +9,8 @@ from __future__ import annotations
 from repro.core import CodeParams, mbr_point, scheme_names
 from repro.storage import compare_schemes, uniform
 
-from .common import quick_mode, row, save_artifact, timed_best_of
+from .common import (bench_engine, quick_mode, row, save_artifact,
+                     timed_best_of)
 
 N, K, D, M_BLOCKS = 20, 5, 10, 8000.0
 SCHEMES = scheme_names(batched=True)   # registry-driven scheme column
@@ -23,15 +24,19 @@ def run():
     a_mbr, _ = mbr_point(M_BLOCKS, K, D)
     rows, artifact = [], {"params": {"n": N, "k": K, "d": D, "M": M_BLOCKS,
                                      "trials": trials}, "points": []}
-    # untimed warm-up: one-time initialization out of the first row
+    engine = bench_engine()
+    # untimed warm-up: one-time initialization out of the first row (at the
+    # timed batch size under jax — one executable per (batch, d) shape)
     compare_schemes(CodeParams.msr(n=N, k=K, d=D, M=M_BLOCKS), uniform(),
-                    SCHEMES, 2, seed=0)
+                    SCHEMES, trials if engine == "jax" else 2, seed=0,
+                    engine=engine)
     for i in range(steps):
         frac = i / (steps - 1)
         alpha = a_msr + (a_mbr - a_msr) * frac
         p = CodeParams(n=N, k=K, d=D, M=M_BLOCKS, alpha=alpha)
         stats, secs = timed_best_of(
-            lambda: compare_schemes(p, uniform(), SCHEMES, trials, seed=80 + i))
+            lambda: compare_schemes(p, uniform(), SCHEMES, trials,
+                                    seed=80 + i, engine=engine))
         point = {"alpha": alpha, "alpha_over_msr": alpha / a_msr,
                  "beta_uniform": p.beta}
         for s in SCHEMES:

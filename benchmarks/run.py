@@ -3,9 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` (or ``BENCH_QUICK=1``
 in the environment) selects a fast smoke pass (fewer shapes / Monte-Carlo
 batches of 80 instead of 120 trials), ``--seed`` (or ``BENCH_SEED``) the
-root seed, and ``--modules`` restricts the run to a subset (``planning`` is
-an alias for the fig6/7/8 trio CI uses); every run also writes JSON
-artifacts under ``benchmarks/artifacts/`` (consumed by EXPERIMENTS.md).
+root seed, ``--engine`` (or ``BENCH_ENGINE``) the planning engine the
+fig6/7/8 drivers sweep with (default "batched", the golden-pinned
+configuration; "jax" opts into the jit tier), and ``--modules`` restricts
+the run to a subset (``planning`` is an alias for the fig6/7/8 trio CI
+uses); every run also writes JSON artifacts under ``benchmarks/artifacts/``
+(consumed by EXPERIMENTS.md).
 
 Every run additionally consolidates the planning-relevant results into
 ``BENCH_planning.json`` at the repo root — per-figure-row ``us_per_call``
@@ -18,7 +21,12 @@ engine (repro.core.batched) are machine-trackable across PRs.  Since
 schema v2 the summary also carries a ``profile`` section (per-stage
 planner wall times from ``repro.obs.PlannerProfile`` over a seeded
 interior-alpha batch, per batched scheme) and a ``schema_version`` +
-``meta`` header (seed, quick flag, git describe).
+``meta`` header (seed, quick flag, git describe — resolved at import,
+before any artifact writes can dirty the tree).  The summary additionally
+carries an ``engine_jax`` A/B section: steady-state batched-vs-jax
+per-plan wall time and plans-per-second for fr/ftr on the profile batch,
+compile warm-up excluded (omitted with ``available: false`` when jax is
+not importable).
 
 Modules:
   fig6_d_sweep    — Fig. 6 (regeneration time & bandwidth vs d)
@@ -118,7 +126,8 @@ def _registry_info() -> dict:
     from repro.core import scheme_names
 
     return {"schemes": list(scheme_names()),
-            "batched": list(scheme_names(batched=True))}
+            "batched": list(scheme_names(batched=True)),
+            "jax": list(scheme_names(jax=True))}
 
 
 def _profile_section(quick: bool, seed: int) -> dict:
@@ -151,14 +160,75 @@ def _profile_section(quick: bool, seed: int) -> dict:
     return out
 
 
+def _engine_jax_section(quick: bool, seed: int) -> dict:
+    """A/B wall time of the NumPy batched engine vs the jit-compiled jax
+    tier on the same seeded interior-alpha batch the ``profile`` section
+    uses (fr's star bisection + witness, ftr's full candidate/local-search
+    pipeline).  Jit compilation is warmed up outside the timed region —
+    the numbers are steady-state per-plan costs, min-of-3.
+
+    Honesty note: these are *measurements*, not marketing.  On a 1-core
+    CPU container XLA's per-row cost exceeds NumPy's SIMD row cost and the
+    lockstep jit program cannot compact converged lanes the way the NumPy
+    engine does, so the jax tier is typically SLOWER here for ftr; its
+    value on this hardware is parity-guarded accelerator readiness (see
+    repro.core.jax_engine).  Wall times are machine noise by nature; the
+    golden guard never pins this section.  Omitted when jax is absent.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import CodeParams, mbr_point, plan_many, scheme_names
+
+    jax_capable = scheme_names(jax=True)
+    if not jax_capable:
+        return {"available": False,
+                "note": "jax not importable in this environment"}
+    B = 64 if quick else 256
+    M, k, d, n = 600.0, 3, 6, 12
+    a_mbr, _ = mbr_point(M, k, d)
+    params = CodeParams(n=n, k=k, d=d, M=M, alpha=0.5 * (M / k + a_mbr))
+    rng = np.random.default_rng([seed, 0x0B5])
+    caps = rng.uniform(10.0, 120.0, size=(B, d + 1, d + 1))
+    idx = np.arange(d + 1)
+    caps[:, idx, idx] = 0.0
+
+    def best_of(fn, reps=3):
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return best
+
+    section = {"available": True, "batch": B, "d": d,
+               "cpu_count": os.cpu_count(), "schemes": {}}
+    for scheme in ("fr", "ftr"):
+        plan_many(caps, params, scheme, engine="jax")      # compile warm-up
+        t_np = best_of(lambda: plan_many(caps, params, scheme,
+                                         engine="batched"))
+        t_jx = best_of(lambda: plan_many(caps, params, scheme,
+                                         engine="jax"))
+        section["schemes"][scheme] = {
+            "batched_plan_ms": round(t_np / B * 1e3, 4),
+            "jax_plan_ms": round(t_jx / B * 1e3, 4),
+            "batched_plans_per_s": round(B / t_np, 1),
+            "jax_plans_per_s": round(B / t_jx, 1),
+            "jax_speedup": round(t_np / t_jx, 3),
+        }
+    return section
+
+
 def _write_planning_summary(rows_by_module: dict) -> None:
-    from .common import BENCH_SCHEMA_VERSION, run_meta
+    from .common import BENCH_SCHEMA_VERSION, bench_engine, run_meta
 
     quick = os.environ.get("BENCH_QUICK", "0") == "1"
     seed = int(os.environ.get("BENCH_SEED", "0"))
     summary = {
         "schema_version": BENCH_SCHEMA_VERSION,
-        "meta": run_meta(seed),
+        "meta": run_meta(seed, engine=bench_engine()),
         "quick": quick,
         "seed": seed,
         "registry": _registry_info(),
@@ -171,6 +241,7 @@ def _write_planning_summary(rows_by_module: dict) -> None:
                     for s, ms in _scheme_plan_ms(rows_by_module).items()},
         "plans": _plan_values(rows_by_module),
         "profile": _profile_section(quick, seed),
+        "engine_jax": _engine_jax_section(quick, seed),
     }
     path = os.path.join(REPO_ROOT, "BENCH_planning.json")
     with open(path, "w") as f:
@@ -185,6 +256,11 @@ def _parse_args(argv=None) -> argparse.Namespace:
                     help="fast smoke pass (same as BENCH_QUICK=1)")
     ap.add_argument("--seed", type=int, default=None,
                     help="root seed (same as BENCH_SEED; default 0)")
+    ap.add_argument("--engine", default=None,
+                    choices=("batched", "scalar", "jax"),
+                    help="planning engine for the fig6/7/8 drivers (same "
+                         "as BENCH_ENGINE; default batched — the "
+                         "golden-pinned configuration)")
     ap.add_argument("--modules", nargs="+", default=None, metavar="MOD",
                     help="subset of modules to run; 'planning' expands to "
                          f"{'/'.join(PLANNING_MODULES)}")
@@ -198,6 +274,8 @@ def main(argv=None) -> None:
         os.environ["BENCH_QUICK"] = "1"
     if args.seed is not None:
         os.environ["BENCH_SEED"] = str(args.seed)
+    if args.engine is not None:
+        os.environ["BENCH_ENGINE"] = args.engine
     modules = MODULES
     if args.modules is not None:
         modules = []

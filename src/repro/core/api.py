@@ -16,18 +16,30 @@ fallback logic.  This module replaces all of that with a single registry:
   call (usable as a decorator), so the next scheme — e.g. the
   topology-aware selection of arXiv:1506.05579 — is a single-file plug-in.
 * :func:`plan` plans one network, :func:`plan_many` a whole batch.  Both
-  own engine resolution (``engine="auto" | "scalar" | "batched"``), kwarg
-  forwarding (``witness=`` reaches exactly the schemes that declared it),
-  and the scalar fallback for schemes without a batched planner — declared
-  by the registry and announced by one RuntimeWarning per scheme per
-  process when the batched engine was explicitly requested.
+  own engine resolution (``engine="auto" | "scalar" | "batched" | "jax"``),
+  kwarg forwarding (``witness=`` reaches exactly the schemes that declared
+  it), and the fallback chain for schemes without the requested engine —
+  declared by the registry and announced by one RuntimeWarning per scheme
+  per process when the missing engine was explicitly requested.
 
 Engine resolution.  ``"auto"`` picks the cheapest correct engine for the
 call shape: the scalar planner for a single network, the batched planner
 (when registered) for a batch — falling back to the scalar loop *silently*
 for schemes that declared ``batched=None``.  ``"batched"`` insists on the
 vectorized engine and warns once per scheme when it has to fall back;
-``"scalar"`` always runs the per-network oracle planners.
+``"scalar"`` always runs the per-network oracle planners.  ``"jax"``
+routes through the jit-compiled :mod:`repro.core.jax_engine` tier for the
+schemes that declared one (star/fr/tr/ftr when jax is importable) and
+falls back batched-then-scalar, warning once per scheme, otherwise.
+``"auto"`` never resolves to jax: the NumPy planners stay the default
+(and the golden-file oracle) on CPU; the jax tier is opt-in.
+
+Ragged batches.  ``plan_many`` also accepts a *mixed fan-out* batch — a
+sequence of overlays whose ``d`` differ (real repair events see whatever
+helpers survive).  Overlays are bucketed by ``d``, each bucket planned in
+one engine call against ``dataclasses.replace(params, d=...)``, and the
+results reassembled in input order, padded to the widest ``d`` (see
+:func:`plan_many`).
 
 ``SCHEMES`` / ``BATCHED_SCHEMES`` / ``plan_batch`` remain importable from
 ``repro.core`` as thin deprecation shims over the registry (one
@@ -37,6 +49,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import importlib.util
 import warnings
 from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
                     Sequence, Tuple, Union)
@@ -60,8 +73,32 @@ __all__ = [
 
 ScalarPlanner = Callable[..., RepairPlan]
 BatchedPlanner = Callable[..., BatchPlanResult]
-ENGINES = ("auto", "scalar", "batched")
+ENGINES = ("auto", "scalar", "batched", "jax")
 TOPOLOGIES = ("star", "tree")
+
+HAS_JAX = importlib.util.find_spec("jax") is not None
+
+
+def _lazy_jax(attr: str) -> Optional[BatchedPlanner]:
+    """Deferred binding of a ``repro.core.jax_engine`` planner.
+
+    Importing jax (and tracing/compiling kernels) costs seconds; the
+    registry must stay cheap to import for the scalar/batched-only
+    callers, so the jax module is imported on *first call*, not at
+    registration.  Returns None when jax itself is absent from the
+    environment — the spec then declares ``jax=None`` and the dispatcher
+    falls back exactly as for any other missing engine.
+    """
+    if not HAS_JAX:
+        return None
+
+    def _call(caps, params, **kw):
+        from . import jax_engine
+        return getattr(jax_engine, attr)(caps, params, **kw)
+
+    _call.__name__ = attr
+    _call.__qualname__ = f"jax_engine.{attr}"
+    return _call
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +109,9 @@ class SchemeSpec:
     RepairPlan``; ``batched`` the vectorized planner ``(caps, params, **kw)
     -> BatchPlanResult`` or ``None`` when the scheme has not been
     vectorized (the dispatcher then runs the declared scalar fallback).
+    ``jax`` is the jit-compiled planner with the same batched signature,
+    or ``None`` when the scheme has no JAX port (or jax is not importable
+    in this environment) — the dispatcher then falls back batched-first.
     ``accepts_witness`` marks planners taking the ``witness=`` selector for
     the traffic-minimal witness engine (exact level cut vs scipy LP);
     ``accepts_profile`` marks *batched* planners taking the ``profile=``
@@ -84,6 +124,7 @@ class SchemeSpec:
     name: str
     scalar: ScalarPlanner
     batched: Optional[BatchedPlanner] = None
+    jax: Optional[BatchedPlanner] = None
     accepts_witness: bool = False
     accepts_profile: bool = False
     topology: str = "star"
@@ -104,6 +145,7 @@ _REGISTRY: Dict[str, SchemeSpec] = {}
 
 def register_scheme(name: str, scalar: Optional[ScalarPlanner] = None, *,
                     batched: Optional[BatchedPlanner] = None,
+                    jax: Optional[BatchedPlanner] = None,
                     accepts_witness: bool = False,
                     accepts_profile: bool = False, topology: str = "star",
                     description: str = "", replace: bool = False):
@@ -126,7 +168,7 @@ def register_scheme(name: str, scalar: Optional[ScalarPlanner] = None, *,
         if name in _REGISTRY and not replace:
             raise ValueError(f"scheme {name!r} is already registered; "
                              f"pass replace=True to overwrite")
-        spec = SchemeSpec(name=name, scalar=fn, batched=batched,
+        spec = SchemeSpec(name=name, scalar=fn, batched=batched, jax=jax,
                           accepts_witness=accepts_witness,
                           accepts_profile=accepts_profile,
                           topology=topology, description=description)
@@ -161,14 +203,19 @@ def schemes() -> Tuple[SchemeSpec, ...]:
 
 
 def scheme_names(batched: Optional[bool] = None,
-                 topology: Optional[str] = None) -> Tuple[str, ...]:
+                 topology: Optional[str] = None,
+                 jax: Optional[bool] = None) -> Tuple[str, ...]:
     """Registered scheme names in registration order, optionally filtered
     by capability: ``batched=True`` keeps schemes with a vectorized
-    planner, ``batched=False`` the declared scalar-only ones;
+    planner, ``batched=False`` the declared scalar-only ones; ``jax=True``
+    keeps schemes with a jit-compiled planner *available in this
+    environment* (always empty when jax is not importable);
     ``topology="star"|"tree"`` filters by produced structure."""
     out = []
     for spec in _REGISTRY.values():
         if batched is not None and (spec.batched is not None) != batched:
+            continue
+        if jax is not None and (spec.jax is not None) != jax:
             continue
         if topology is not None and spec.topology != topology:
             continue
@@ -181,6 +228,7 @@ def scheme_names(batched: Optional[bool] = None,
 # ---------------------------------------------------------------------------
 
 _warned_scalar_fallback: set = set()
+_warned_jax_fallback: set = set()
 
 
 def _warn_scalar_fallback(scheme: str, entry: str) -> None:
@@ -193,6 +241,41 @@ def _warn_scalar_fallback(scheme: str, entry: str) -> None:
             f"{scheme!r} (the registry declares batched=None); falling back "
             f"to the scalar planner for all networks", RuntimeWarning,
             stacklevel=4)
+
+
+def _warn_jax_fallback(scheme: str, entry: str, fallback: str) -> None:
+    """One warning per scheme per process when the jax engine was requested
+    for a scheme without a JAX port (or with jax absent from the env)."""
+    if scheme not in _warned_jax_fallback:
+        _warned_jax_fallback.add(scheme)
+        why = ("the scheme declares no JAX planner" if HAS_JAX
+               else "jax is not importable in this environment")
+        warnings.warn(
+            f"{entry}(engine='jax'): no JAX planner available for "
+            f"{scheme!r} ({why}); falling back to the {fallback} engine",
+            RuntimeWarning, stacklevel=4)
+
+
+def _resolve_engine(spec: SchemeSpec, engine: str, entry: str) -> str:
+    """Map a requested engine onto what the registry can actually run.
+
+    ``"auto"`` never resolves to jax — the NumPy planners are the oracle
+    and the CPU default; the jit tier is opt-in per call.  Explicit
+    requests that cannot be honored warn once per scheme and degrade along
+    jax -> batched -> scalar.
+    """
+    if engine == "jax":
+        if spec.jax is not None:
+            return "jax"
+        fallback = "batched" if spec.batched is not None else "scalar"
+        _warn_jax_fallback(spec.name, entry, fallback)
+        return fallback
+    if engine == "batched" and spec.batched is None:
+        _warn_scalar_fallback(spec.name, entry)
+        return "scalar"
+    if engine == "auto":
+        return "batched" if spec.batched is not None else "scalar"
+    return engine
 
 
 def _planner_kwargs(spec: SchemeSpec, witness: str, kwargs: dict) -> dict:
@@ -227,9 +310,10 @@ def plan(net: OverlayNetwork, params: CodeParams, scheme: str,
 
     ``engine="auto"`` (default) runs the scalar planner — the correctness
     oracle, and the cheapest engine for a single network.  ``"batched"``
-    routes through the vectorized planner as a B=1 batch (falling back to
-    scalar, with a once-per-scheme RuntimeWarning, when the registry
-    declares no batched planner).  ``witness`` selects the traffic-minimal
+    and ``"jax"`` route through the vectorized planners as a B=1 batch
+    (falling back along jax -> batched -> scalar, with a once-per-scheme
+    RuntimeWarning, when the registry declares no such engine for the
+    scheme).  ``witness`` selects the traffic-minimal
     witness engine and reaches exactly the schemes that declared
     ``accepts_witness``; ``profile`` (optional, a
     ``repro.obs.profile.PlannerProfile``-shaped object) records the call
@@ -241,17 +325,17 @@ def plan(net: OverlayNetwork, params: CodeParams, scheme: str,
     _check_engine(engine)
     spec = get_scheme(scheme)
     kw = _planner_kwargs(spec, witness, kwargs)
-    if engine == "batched" and spec.batched is None:
-        _warn_scalar_fallback(scheme, "plan")
-        engine = "scalar"
+    resolved = "scalar" if engine == "auto" else \
+        _resolve_engine(spec, engine, "plan")
     if profile is not None:
-        profile.note(scheme=spec.name, batch=1,
-                     engine="batched" if engine == "batched" else "scalar")
-    if engine == "batched":
-        if spec.accepts_profile and profile is not None:
+        profile.note(scheme=spec.name, batch=1, engine=resolved)
+    if resolved in ("batched", "jax"):
+        planner = spec.batched if resolved == "batched" else spec.jax
+        if resolved == "batched" and spec.accepts_profile \
+                and profile is not None:
             kw["profile"] = profile
         with _pstage(profile, "total"):
-            res = spec.batched(caps_tensor([net]), params, **kw)
+            res = planner(caps_tensor([net]), params, **kw)
         return plans_from_batch(res, params)[0]
     with _pstage(profile, "total"):
         return spec.scalar(net, params, **kw)
@@ -269,12 +353,24 @@ def plan_many(nets: Union[np.ndarray, Sequence[OverlayNetwork]],
     planner when the registry has one and the scalar loop otherwise —
     silently, because the fallback is *declared*; ``engine="batched"``
     additionally warns once per scheme when it has to fall back;
-    ``engine="scalar"`` always runs the per-network oracle.  ``profile``
-    (optional, ``repro.obs.profile.PlannerProfile``-shaped) records batch
-    shape, resolved engine and wall time, plus per-stage timings for
-    schemes that declared ``accepts_profile`` (fr/ftr: bisection,
-    candidate search, witness extraction...) — without changing what is
-    planned.
+    ``engine="jax"`` routes through the jit-compiled tier for schemes that
+    declared one and falls back batched-then-scalar (once-per-scheme
+    RuntimeWarning); ``engine="scalar"`` always runs the per-network
+    oracle.  ``"auto"`` never resolves to jax.  ``profile`` (optional,
+    ``repro.obs.profile.PlannerProfile``-shaped) records batch shape,
+    resolved engine and wall time, plus per-stage timings for schemes that
+    declared ``accepts_profile`` (fr/ftr: bisection, candidate search,
+    witness extraction...) — without changing what is planned.
+
+    Mixed fan-outs (ragged d): when ``nets`` is a sequence of overlays
+    whose ``d`` differ, the batch is bucketed by ``d``, each bucket
+    planned in one engine call against ``dataclasses.replace(params,
+    d=...)`` (same n/k/M/alpha — the code is fixed, the helper count is
+    per-failure), and reassembled in input order.  The packed arrays are
+    padded to the widest fan-out — row ``b`` of ``betas``/``parents`` is
+    meaningful up to that overlay's own ``d`` and zero beyond — and the
+    per-network :class:`RepairPlan` objects (each carrying its true ``d``
+    via ``plan.params``) always ride along in ``plans``.
 
     The result's ``engine`` field reports which path actually planned the
     batch; on the scalar path the original :class:`RepairPlan` objects ride
@@ -282,28 +378,84 @@ def plan_many(nets: Union[np.ndarray, Sequence[OverlayNetwork]],
     """
     _check_engine(engine)
     spec = get_scheme(scheme)
-    kw = _planner_kwargs(spec, witness, kwargs)
     is_tensor = isinstance(nets, np.ndarray)
-    if engine == "batched" and spec.batched is None:
-        _warn_scalar_fallback(scheme, "plan_many")
-    use_batched = spec.batched is not None and engine != "scalar"
+    if not is_tensor:
+        nets = list(nets)
+        ds = {n.d for n in nets}
+        if len(ds) > 1:
+            return _plan_ragged(nets, params, scheme, engine=engine,
+                                witness=witness, profile=profile, **kwargs)
+    kw = _planner_kwargs(spec, witness, kwargs)
+    resolved = _resolve_engine(spec, engine, "plan_many")
     if profile is not None:
         profile.note(scheme=spec.name,
                      batch=int(nets.shape[0]) if is_tensor else len(nets),
-                     d=params.d,
-                     engine="batched" if use_batched else "scalar",
-                     fallback=engine == "batched" and spec.batched is None)
-    if use_batched:
+                     d=params.d, engine=resolved,
+                     fallback=engine not in ("auto", resolved))
+    if resolved in ("batched", "jax"):
+        planner = spec.batched if resolved == "batched" else spec.jax
         caps = nets if is_tensor else caps_tensor(nets)
-        if spec.accepts_profile and profile is not None:
+        if resolved == "batched" and spec.accepts_profile \
+                and profile is not None:
             kw["profile"] = profile
         with _pstage(profile, "total"):
-            return spec.batched(caps, params, **kw)
+            return planner(caps, params, **kw)
     net_list = ([OverlayNetwork(c.tolist()) for c in nets] if is_tensor
                 else list(nets))
     with _pstage(profile, "total"):
         plans = [spec.scalar(n, params, **kw) for n in net_list]
     return _batch_from_plans(spec, plans, params)
+
+
+def _plan_ragged(nets: List[OverlayNetwork], params: CodeParams, scheme: str,
+                 engine: str, witness: str, profile,
+                 **kwargs) -> BatchPlanResult:
+    """Mixed fan-out dispatch: bucket by ``d``, one engine call per bucket,
+    reassemble in input order padded to the widest ``d``.
+
+    Each bucket is planned against ``dataclasses.replace(params, d=d_b)``
+    — this keeps (n, k, M, alpha) and re-runs parameter validation, so an
+    overlay too small for the code (d < k) fails loudly here rather than
+    producing a nonsense plan.  Per-bucket results are identical to what a
+    single-d :func:`plan_many` call over that sub-batch returns (the
+    bucket path *is* that call), so engine guarantees — batched bitwise
+    vs scalar, jax within documented tolerance — carry over row by row.
+    """
+    d_max = max(n.d for n in nets)
+    buckets: Dict[int, List[int]] = {}
+    for i, n in enumerate(nets):
+        buckets.setdefault(n.d, []).append(i)
+    if profile is not None:
+        profile.note(scheme=scheme, batch=len(nets), ragged=True,
+                     d_buckets=sorted(buckets))
+    B = len(nets)
+    times = np.full(B, np.inf)
+    traffic = np.full(B, np.inf)
+    betas = np.zeros((B, d_max))
+    parents = np.zeros((B, d_max + 1), dtype=np.int64)
+    lbs = np.full(B, np.nan)
+    plans: List[Optional[RepairPlan]] = [None] * B
+    engines = set()
+    for db in sorted(buckets):
+        idx = buckets[db]
+        pb = params if db == params.d else dataclasses.replace(params, d=db)
+        sub = plan_many([nets[i] for i in idx], pb, scheme, engine=engine,
+                        witness=witness, profile=profile, **kwargs)
+        engines.add(sub.engine)
+        times[idx] = sub.times
+        traffic[idx] = sub.traffic
+        betas[np.asarray(idx)[:, None], np.arange(db)[None, :]] = sub.betas
+        parents[np.asarray(idx)[:, None],
+                np.arange(db + 1)[None, :]] = sub.parents
+        if sub.lower_bounds is not None:
+            lbs[idx] = sub.lower_bounds
+        for i, p in zip(idx, plans_from_batch(sub, pb)):
+            plans[i] = p
+    return BatchPlanResult(
+        scheme, times, traffic, betas, parents,
+        lower_bounds=None if np.isnan(lbs).all() else lbs,
+        engine=engines.pop() if len(engines) == 1 else "mixed",
+        plans=plans)
 
 
 def _batch_from_plans(spec: SchemeSpec, plans: List[RepairPlan],
@@ -331,14 +483,18 @@ def _batch_from_plans(spec: SchemeSpec, plans: List[RepairPlan],
 # Built-in schemes (the paper's family)
 # ---------------------------------------------------------------------------
 
-register_scheme("star", plan_star, batched=plan_star_batch, topology="star",
+register_scheme("star", plan_star, batched=plan_star_batch,
+                jax=_lazy_jax("plan_star_jax"), topology="star",
                 description="conventional uniform-beta star [3] (baseline)")
-register_scheme("fr", plan_fr, batched=plan_fr_batch, accepts_witness=True,
+register_scheme("fr", plan_fr, batched=plan_fr_batch,
+                jax=_lazy_jax("plan_fr_jax"), accepts_witness=True,
                 accepts_profile=True, topology="star",
                 description="Flexible Regeneration on the star (Section III)")
-register_scheme("tr", plan_tr, batched=plan_tr_batch, topology="tree",
+register_scheme("tr", plan_tr, batched=plan_tr_batch,
+                jax=_lazy_jax("plan_tr_jax"), topology="tree",
                 description="tree topology, uniform traffic (Algorithm 1)")
-register_scheme("ftr", plan_ftr, batched=plan_ftr_batch, accepts_witness=True,
+register_scheme("ftr", plan_ftr, batched=plan_ftr_batch,
+                jax=_lazy_jax("plan_ftr_jax"), accepts_witness=True,
                 accepts_profile=True, topology="tree",
                 description="flexible traffic on a searched tree (Alg. 2)")
 register_scheme("shah", plan_shah, batched=plan_shah_batch, topology="star",

@@ -90,24 +90,47 @@ class RepairPolicy:
         return [[p] for p in self.replan(caps, params)]
 
 
+def _engine_for(scheme: str, engine: str) -> str:
+    """Per-scheme engine downgrade for mixed-engine policies.
+
+    A policy-level engine preference (e.g. ``engine="jax"``) must not
+    break on schemes that lack that tier — rctree has neither a jax nor a
+    batched planner and simply loops the scalar oracle.  The downgrade is
+    *declared* by the registry (jax -> batched -> scalar), so it is
+    resolved here silently and passed to ``plan_many`` as an exact
+    request, instead of letting the dispatcher warn once per scheme about
+    a fallback the policy already knows about.
+    """
+    spec = get_scheme(scheme)
+    if engine == "jax" and spec.jax is None:
+        engine = "batched"
+    if engine == "batched" and spec.batched is None:
+        engine = "scalar"
+    return engine
+
+
 class FixedPolicy(RepairPolicy):
     """Always the same scheme (any name in the scheme registry).
 
     Planning goes through :func:`repro.core.plan_many` with
-    ``engine="auto"``: schemes registered with a batched planner run it,
-    schemes declared scalar-only (rctree) take the per-overlay scalar
-    planner — the registry owns that decision, not this class.
+    ``engine="auto"`` by default: schemes registered with a batched
+    planner run it, schemes declared scalar-only (rctree) take the
+    per-overlay scalar planner — the registry owns that decision, not
+    this class.  ``engine="jax"`` opts the scheme into the jit tier when
+    it has one (downgrading silently otherwise, see :func:`_engine_for`).
     """
 
-    def __init__(self, scheme: str):
+    def __init__(self, scheme: str, engine: str = "auto"):
         self.spec = get_scheme(scheme)   # raises listing registered schemes
         self.scheme = scheme
         self.name = scheme
+        self.engine = engine
 
     def plan_batch(self, caps: np.ndarray, params: CodeParams,
                    ) -> List[RepairPlan]:
         return plans_from_batch(
-            plan_many(caps, params, self.scheme, engine="auto"), params)
+            plan_many(caps, params, self.scheme,
+                      engine=_engine_for(self.scheme, self.engine)), params)
 
 
 class FlexiblePolicy(RepairPolicy):
@@ -115,23 +138,34 @@ class FlexiblePolicy(RepairPolicy):
     keep the plan with the smallest regeneration time under the residual
     capacities.  Ties break toward the earlier scheme in ``schemes`` (the
     default order prefers ftr), keeping the choice deterministic.
+
+    Engines are mixed per scheme: the policy-level ``engine`` preference
+    is downgraded scheme by scheme (jax -> batched -> scalar, see
+    :func:`_engine_for`), so jax-capable schemes go through the jit tier
+    in one call each while scalar-only schemes (rctree) loop the scalar
+    oracle — a candidate slate may legitimately combine all three
+    engines.  The default ``engine="auto"`` reproduces the historical
+    batched-with-declared-scalar-fallback behavior bitwise.
     """
 
     name = "flexible"
 
-    def __init__(self, schemes: Sequence[str] = ("ftr", "tr", "fr", "star")):
-        specs = [get_scheme(s) for s in schemes]  # raises listing registered
-        scalar_only = [sp.name for sp in specs if sp.batched is None]
-        if scalar_only:
-            raise ValueError(
-                f"flexible policy needs batched planners; none registered "
-                f"for {scalar_only} (batched schemes: "
-                f"{sorted(scheme_names(batched=True))})")
+    def __init__(self, schemes: Sequence[str] = ("ftr", "tr", "fr", "star"),
+                 engine: str = "auto"):
+        for s in schemes:
+            get_scheme(s)                # raises listing registered schemes
         self.schemes: Tuple[str, ...] = tuple(schemes)
+        self.engine = engine
+
+    def _plan_scheme(self, caps: np.ndarray, params: CodeParams,
+                     scheme: str) -> List[RepairPlan]:
+        return plans_from_batch(
+            plan_many(caps, params, scheme,
+                      engine=_engine_for(scheme, self.engine)), params)
 
     def plan_batch(self, caps: np.ndarray, params: CodeParams,
                    ) -> List[RepairPlan]:
-        per_scheme = [plans_from_batch(plan_many(caps, params, s), params)
+        per_scheme = [self._plan_scheme(caps, params, s)
                       for s in self.schemes]
         times = np.array([[p.time for p in plans] for plans in per_scheme])
         winner = np.argmin(times, axis=0)       # first minimum wins ties
@@ -142,14 +176,18 @@ class FlexiblePolicy(RepairPolicy):
         """One candidate per scheme per repair, in scheme-preference order
         (so bank-aware scoring ties break toward the earlier scheme,
         matching :meth:`plan_batch`'s determinism)."""
-        per_scheme = [plans_from_batch(plan_many(caps, params, s), params)
+        per_scheme = [self._plan_scheme(caps, params, s)
                       for s in self.schemes]
         return [[plans[r] for plans in per_scheme]
                 for r in range(caps.shape[0])]
 
 
-def make_policy(spec: str) -> RepairPolicy:
-    """'flexible' or a fixed scheme name — the CLI/bench entry point."""
+def make_policy(spec: str, engine: str = "auto") -> RepairPolicy:
+    """'flexible' or a fixed scheme name — the CLI/bench entry point.
+
+    ``engine`` is the policy-level preference ("auto" | "scalar" |
+    "batched" | "jax"), downgraded per scheme by :func:`_engine_for`.
+    """
     if spec == "flexible":
-        return FlexiblePolicy()
-    return FixedPolicy(spec)
+        return FlexiblePolicy(engine=engine)
+    return FixedPolicy(spec, engine=engine)

@@ -55,6 +55,10 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
     (rctree) are owned by the scheme registry — the fallback warns once per
     scheme per process and is surfaced in ``SchemeStats.engine``.
     ``engine="batched"`` (default) plans every trial at once;
+    ``engine="jax"`` routes jax-capable schemes through the jit tier
+    (others fall back per the registry, with its once-per-scheme warning)
+    while the STAR normalization baseline stays on the batched engine so
+    normalized metrics are engine-for-engine comparable;
     ``engine="scalar"`` is the original per-network loop, kept as the
     correctness oracle (see tests/test_batched.py).  ``witness`` selects
     the traffic-minimal witness engine for fr/ftr: the exact level-cut
@@ -62,18 +66,18 @@ def compare_schemes(params: CodeParams, sampler: CapSampler,
     """
     import time as _time
 
-    if engine not in ("batched", "scalar"):
+    if engine not in ("batched", "scalar", "jax"):
         raise ValueError(f"unknown engine {engine!r}")
     rng = random.Random(seed)
     nets = [sampler(rng, params.d) for _ in range(trials)]
 
-    if engine == "batched":
+    if engine in ("batched", "jax"):
         caps = caps_tensor(nets)
         base = plan_many(caps, params, "star", engine="batched")
         out: Dict[str, SchemeStats] = {}
         for s in schemes:
             t0 = _time.perf_counter()
-            res = plan_many(caps, params, s, engine="batched",
+            res = plan_many(caps, params, s, engine=engine,
                             witness=witness)
             dt = _time.perf_counter() - t0
             out[s] = SchemeStats(

@@ -260,8 +260,11 @@ def test_policy_specs_validate_against_registry():
         FixedPolicy("bogus")
     with pytest.raises(ValueError, match="registered schemes"):
         make_policy("bogus")
-    with pytest.raises(ValueError, match="batched planners"):
-        FlexiblePolicy(("ftr", "rctree"))
+    with pytest.raises(ValueError, match="registered schemes"):
+        FlexiblePolicy(("ftr", "bogus"))
+    # scalar-only schemes are valid flexible candidates since the
+    # mixed-engine path: rctree simply loops the scalar oracle.
+    assert FlexiblePolicy(("ftr", "rctree")).schemes == ("ftr", "rctree")
     assert make_policy("rctree").name == "rctree"   # scalar-only is fine
     assert make_policy("flexible").name == "flexible"
 

@@ -1,0 +1,236 @@
+"""The jit-compiled jax planning tier vs the NumPy engines, and the
+ragged-d (mixed fan-out) batch API.
+
+Cross-engine contract (documented in repro.core.jax_engine and enforced in
+CI by benchmarks/check_engine_parity.py): tree topology (``parents``) is
+bitwise equal to the NumPy engines — any divergence is algorithmic drift —
+and star times are bitwise too; all other floats agree within 1e-9
+relative (XLA may re-associate reductions, e.g. the traffic sum, which
+permits ~1-ulp differences; measured drift is ~1e-14).
+
+The batches here are deliberately small (d in {4, 6}): the jax engine
+compiles one executable per (batch, d) shape and compilation, not
+planning, dominates test wall time.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (CodeParams, OverlayNetwork, caps_tensor, mbr_point,
+                        plan, plan_many, plans_from_batch)
+from repro.core.api import get_scheme, scheme_names
+
+JAX_SCHEMES = ("star", "fr", "tr", "ftr")
+REL_TOL = 1e-9
+
+
+def _caps(seed: int, B: int, d: int, lo=10.0, hi=120.0) -> np.ndarray:
+    rng = np.random.default_rng([seed, 0x1A2])
+    caps = rng.uniform(lo, hi, size=(B, d + 1, d + 1))
+    idx = np.arange(d + 1)
+    caps[:, idx, idx] = 0.0
+    return caps
+
+
+def _params(d: int, k: int, interior: bool) -> CodeParams:
+    M = 600.0
+    if not interior:
+        return CodeParams.msr(n=d + 2, k=k, d=d, M=M)
+    a_mbr, _ = mbr_point(M, k, d)
+    return CodeParams(n=d + 2, k=k, d=d, M=M, alpha=0.5 * (M / k + a_mbr))
+
+
+def _assert_close(a, b, msg):
+    np.testing.assert_allclose(np.asarray(a, dtype=float),
+                               np.asarray(b, dtype=float),
+                               rtol=REL_TOL, atol=REL_TOL, err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Registry surface
+# ---------------------------------------------------------------------------
+
+def test_registry_declares_jax_tier():
+    assert scheme_names(jax=True) == JAX_SCHEMES
+    for s in JAX_SCHEMES:
+        assert get_scheme(s).jax is not None
+    for s in ("shah", "rctree"):
+        assert get_scheme(s).jax is None
+
+
+@pytest.mark.parametrize("scheme", ["shah", "rctree"])
+def test_jax_fallback_warns_once_per_scheme(scheme):
+    from repro.core import api
+
+    params = _params(6, 3, interior=False)
+    caps = _caps(0, 4, 6)
+    api._warned_jax_fallback.discard(scheme)
+    with pytest.warns(RuntimeWarning, match="no JAX planner available"):
+        res = plan_many(caps, params, scheme, engine="jax")
+    # shah degrades to its batched planner, rctree all the way to scalar
+    assert res.engine == ("batched" if scheme == "shah" else "scalar")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # second call must be silent
+        plan_many(caps, params, scheme, engine="jax")
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interior", [False, True],
+                         ids=["msr", "interior"])
+def test_jax_matches_batched_and_scalar(interior):
+    params = _params(6, 3, interior)
+    caps = _caps(7 + interior, 9, 6)
+    nets = [OverlayNetwork(c.tolist()) for c in caps]
+    for s in JAX_SCHEMES:
+        rj = plan_many(caps, params, s, engine="jax")
+        rb = plan_many(caps, params, s, engine="batched")
+        assert rj.engine == "jax"
+        assert (rj.parents == rb.parents).all(), f"{s}: parents drifted"
+        if s == "star":
+            assert (rj.times == rb.times).all(), "star times must be bitwise"
+        _assert_close(rj.times, rb.times, f"{s}: times")
+        _assert_close(rj.traffic, rb.traffic, f"{s}: traffic")
+        _assert_close(rj.betas, rb.betas, f"{s}: betas")
+        if rb.lower_bounds is not None:
+            _assert_close(rj.lower_bounds, rb.lower_bounds, f"{s}: lb")
+        # direct tie to the scalar oracle on a row subset
+        for b in range(3):
+            ps = plan(nets[b], params, s, engine="scalar")
+            assert abs(rj.times[b] - ps.time) <= REL_TOL * max(1, ps.time), s
+            got_par = {u: int(rj.parents[b, u]) for u in range(1, params.d + 1)}
+            assert got_par == ps.parent, f"{s}: row {b} tree differs"
+
+
+def test_jax_plan_single_network_roundtrip():
+    """plan(engine='jax') rides the B=1 batch path and materializes a
+    RepairPlan that validates structurally against the overlay."""
+    params = _params(4, 2, interior=True)
+    net = OverlayNetwork(_caps(3, 1, 4)[0].tolist())
+    for s in JAX_SCHEMES:
+        pj = plan(net, params, s, engine="jax")
+        po = plan(net, params, s, engine="scalar")
+        assert pj.time == pytest.approx(po.time, rel=REL_TOL)
+        assert pj.parent == po.parent
+        pj.validate(net)
+
+
+def test_jax_rejects_lp_witness():
+    params = _params(4, 2, interior=True)
+    caps = _caps(4, 2, 4)
+    with pytest.raises(ValueError, match="witness"):
+        plan_many(caps, params, "fr", engine="jax", witness="lp")
+
+
+# ---------------------------------------------------------------------------
+# Ragged-d (mixed fan-out) batches
+# ---------------------------------------------------------------------------
+
+def _ragged_nets(seed: int):
+    """Mixed fan-outs out of input order on purpose: 6, 4, 6, 5, 4."""
+    ds = [6, 4, 6, 5, 4]
+    return [OverlayNetwork(_caps(seed + i, 1, d)[0].tolist())
+            for i, d in enumerate(ds)], ds
+
+
+@pytest.mark.parametrize("engine", ["batched", "jax", "scalar"])
+def test_ragged_matches_per_overlay_scalar(engine):
+    """Each row of a mixed-d batch equals planning that overlay alone with
+    params re-targeted to its d — bitwise for batched/scalar (same NumPy
+    code path), 1e-9 for jax — and rows come back in input order."""
+    params = _params(6, 3, interior=False)
+    nets, ds = _ragged_nets(11)
+    for s in ("fr", "ftr"):
+        res = plan_many(nets, params, s, engine=engine)
+        assert res.engine == engine
+        assert res.betas.shape == (len(nets), max(ds))
+        assert res.parents.shape == (len(nets), max(ds) + 1)
+        for i, (net, d) in enumerate(zip(nets, ds)):
+            pd = dataclasses.replace(params, d=d)
+            ps = plan(net, pd, s, engine="scalar")
+            if engine == "jax":
+                assert res.times[i] == pytest.approx(ps.time, rel=REL_TOL)
+                np.testing.assert_allclose(res.betas[i, :d], ps.betas,
+                                           rtol=REL_TOL, atol=REL_TOL)
+            else:
+                assert res.times[i] == ps.time, (s, i)
+                assert list(res.betas[i, :d]) == ps.betas, (s, i)
+            assert {u: int(res.parents[i, u])
+                    for u in range(1, d + 1)} == ps.parent, (s, i)
+            # padding beyond the overlay's own d stays zero
+            assert (res.betas[i, d:] == 0).all()
+            assert (res.parents[i, d + 1:] == 0).all()
+            # the materialized plan carries its true fan-out
+            assert res.plans[i].params.d == d
+
+
+def test_ragged_plans_roundtrip_verbatim():
+    params = _params(6, 3, interior=False)
+    nets, ds = _ragged_nets(13)
+    res = plan_many(nets, params, "ftr", engine="batched")
+    plans = plans_from_batch(res, params)
+    for pl, net, d in zip(plans, nets, ds):
+        assert pl.params.d == d
+        pl.validate(net)
+
+
+def test_single_d_batch_degenerates_to_existing_path():
+    """A sequence of same-d overlays must NOT take the ragged path: one
+    engine call, results bitwise identical to the tensor entry point."""
+    params = _params(6, 3, interior=False)
+    caps = _caps(17, 6, 6)
+    nets = [OverlayNetwork(c.tolist()) for c in caps]
+    direct = plan_many(caps, params, "ftr", engine="batched")
+    via_seq = plan_many(nets, params, "ftr", engine="batched")
+    assert via_seq.engine == "batched"
+    assert (via_seq.times == direct.times).all()
+    assert (via_seq.parents == direct.parents).all()
+    assert (via_seq.betas == direct.betas).all()
+    assert via_seq.plans is None            # batched path attaches no plans
+
+
+def test_ragged_infeasible_overlay_too_small():
+    """An overlay with d < k cannot serve the code: params re-validation
+    fails loudly instead of planning nonsense."""
+    params = _params(6, 3, interior=False)
+    nets = [OverlayNetwork(_caps(19, 1, 6)[0].tolist()),
+            OverlayNetwork(_caps(20, 1, 2)[0].tolist())]   # d=2 < k=3
+    with pytest.raises(ValueError, match="k <= d"):
+        plan_many(nets, params, "fr", engine="batched")
+
+
+# ---------------------------------------------------------------------------
+# Mixed-engine FlexiblePolicy
+# ---------------------------------------------------------------------------
+
+def test_flexible_policy_mixed_engines():
+    """engine='jax' routes jax-capable schemes through the jit tier while
+    rctree (scalar-only) loops the oracle — no warning, the downgrade is
+    policy-resolved — and the winning plans match the default engine's
+    within cross-engine tolerance."""
+    from repro.fleet.policy import FlexiblePolicy, _engine_for
+
+    assert _engine_for("ftr", "jax") == "jax"
+    assert _engine_for("shah", "jax") == "batched"
+    assert _engine_for("rctree", "jax") == "scalar"
+    assert _engine_for("rctree", "batched") == "scalar"
+    assert _engine_for("ftr", "auto") == "auto"
+
+    params = _params(6, 3, interior=False)
+    caps = _caps(23, 5, 6)
+    pol_jax = FlexiblePolicy(("ftr", "fr", "rctree"), engine="jax")
+    pol_def = FlexiblePolicy(("ftr", "fr", "rctree"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        plans_jax = pol_jax.plan_batch(caps, params)
+    plans_def = pol_def.plan_batch(caps, params)
+    assert len(plans_jax) == caps.shape[0]
+    for pj, pd in zip(plans_jax, plans_def):
+        assert pj.scheme == pd.scheme
+        assert pj.time == pytest.approx(pd.time, rel=REL_TOL)
