@@ -49,6 +49,10 @@ ROBUSTNESS_DEFAULTS = {
     "watchdog_period": 0.0,
     "degraded_d": False,
     "trace": False,
+    # coded data plane (ISSUE 10): off, no arrival trace, no decode checks
+    "dataplane": False,
+    "read_trace": None,
+    "dataplane_verify": False,
 }
 
 

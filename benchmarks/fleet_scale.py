@@ -52,6 +52,14 @@ section stays bitwise reproducible; ``perf`` is wall clock by design and
 is guarded by ``benchmarks/check_fleet_perf.py`` (machine-normalized,
 like the planning tripwire), never by the bitwise golden.
 
+Coded data plane (ISSUE 10): ``dataplane_*`` config rows run the fleet
+with real payloads — degraded reads as k-fragment transfers, repairs
+producing RLNC-coded blocks through ``repro.coding.rlnc`` with decode
+verification — and carry the read-latency percentiles, wire-byte
+counters, and a ``dataplane_links`` top-10 (per-link repair/read bytes)
+next to the usual summary.  One row replays an open-loop arrival trace
+generated to ``benchmarks/artifacts/read_workload.jsonl``.
+
 CLI: ``python -m benchmarks.fleet_scale [--quick] [--seed N] [--trace]
 [--clusters K]`` (CI runs the ``--quick`` smoke, which asserts the
 artifact exists and backlog is finite, plus a ``--trace`` pass checked
@@ -68,7 +76,7 @@ import zlib
 
 from repro.core import CodeParams
 from repro.fleet import SCENARIOS, ClusterEnsemble, FleetSimulator, \
-    Scenario, make_policy, mitigated, simulate
+    ReadTrace, Scenario, generate_trace, make_policy, mitigated, simulate
 from repro.fleet.scenario import uniform_matrix
 from repro.obs import json_sanitize
 
@@ -211,6 +219,40 @@ def _sweep(quick: bool):
         yield f"{kind}_n{n}_flexible_robust", mitigated(sc), "flexible"
 
 
+def _dataplane_rows(quick: bool, root_seed: int):
+    """(name, scenario, policy) rows exercising the coded data plane
+    (ISSUE 10): reads and repairs as real fragment/block transfers.
+
+    * ``..._storm_...`` — the hot_reads scenario under a capacity storm
+      (fast, deep shocks) with decode verification on: every completed
+      repair's regenerated blocks must keep the mini code store
+      k-of-n decodable.
+    * ``..._trace_...`` — the same data plane driven by an open-loop
+      arrival trace generated to a JSONL file and replayed (the
+      millions-of-arrivals path, exercised here at bench scale).  The
+      workload file lands in ``benchmarks/artifacts/`` — NOT under
+      ``traces/``, which check_trace.py globs for flight-recorder logs.
+    """
+    n, lam = 16, 2e-3
+    budget = EVENT_BUDGET_QUICK if quick else EVENT_BUDGET
+    duration = budget / (lam * n)
+    storm = dataclasses.replace(
+        SCENARIOS["hot_reads"](n, failure_rate=lam, duration=duration,
+                               dataplane=True, dataplane_verify=True),
+        shock_period=duration / 8, shock_lo=0.35)
+    yield f"dataplane_hot_reads_storm_n{n}_flexible", storm, "flexible"
+    art_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "artifacts")
+    os.makedirs(art_dir, exist_ok=True)
+    workload = os.path.join(art_dir, "read_workload.jsonl")
+    generate_trace(workload, rate=0.1, duration=duration,
+                   seed=_config_seed(root_seed, "read_workload"))
+    replay = SCENARIOS["hot_reads"](
+        n, failure_rate=lam, duration=duration, dataplane=True,
+        read_trace=ReadTrace(path=workload), dataplane_verify=True)
+    yield f"dataplane_hot_reads_trace_n{n}_ftr", replay, "ftr"
+
+
 def _trace_config(name: str, sc, pol: str, params, seed: int,
                   untraced_summary: dict, root_seed: int) -> None:
     """Re-run one configuration with the flight recorder on, assert the
@@ -252,6 +294,31 @@ def run(root_seed: int = 0, trace: bool = False, clusters: int = 0):
             f"mig={summary['migrations']:.0f} "
             f"saved={summary['work_saved_fraction']:.2f} "
             f"plan_err={summary['plan_err_mean']:.2f}"))
+    # coded data plane rows (ISSUE 10): run the simulator directly so the
+    # per-link wire-byte ledger can ride in the artifact next to the
+    # summary (``dataplane_links``); ``simulate()`` would discard it
+    for name, sc, pol in _dataplane_rows(quick, root_seed):
+        seed = _config_seed(root_seed, name)
+        t0 = time.perf_counter()
+        sim = FleetSimulator(sc, make_policy(pol), params, seed=seed)
+        summary = sim.run().summary()
+        wall = time.perf_counter() - t0
+        assert math.isfinite(summary["mean_backlog"]), name
+        assert summary["reads_completed"] > 0, name
+        assert summary["decode_failures"] == 0, name
+        assert summary["repair_bytes"] > 0 and summary["read_bytes"] > 0, name
+        if trace:
+            _trace_config(name, sc, pol, params, seed, summary, root_seed)
+        configs[name] = dict(summary,
+                             dataplane_links=sim.dataplane.top_links(10))
+        events = max(summary["completed"] + summary["aborted"], 1)
+        rows.append(row(
+            f"fleet/{name}", wall / events * 1e6,
+            f"reads={summary['reads_completed']} "
+            f"read_p99={summary['read_p99']:.3f}s "
+            f"repair_GB={summary['repair_bytes'] / 1e9:.1f} "
+            f"read_GB={summary['read_bytes'] / 1e9:.1f} "
+            f"decode_fail={summary['decode_failures']}"))
     # region-scale ensemble rows: K clusters in lockstep, pooled summary
     # plus cluster-bootstrap CIs.  Deterministic like every config row —
     # the bootstrap rng is seeded from the config seed.

@@ -12,6 +12,7 @@ single-repair Monte Carlo cannot produce.  See src/README.md for the
 architecture and ``benchmarks/fleet_scale.py`` for the sweep driver.
 """
 from .cluster import ClusterState, FAILED, HEALTHY, REPAIRING
+from .dataplane import DataPlane, ReadTrace, generate_trace
 from .ensemble import (ClusterEnsemble, bootstrap_cis, cluster_seed,
                        pool_metrics)
 from .events import Event, EventQueue
@@ -25,12 +26,13 @@ from .sharing import ActiveRepair, LinkShareModel, apply_credit, plan_links
 from .sim import FleetSimulator, QueuedRepair, simulate
 
 __all__ = [
-    "ActiveRepair", "ClusterEnsemble", "ClusterState", "Event",
-    "EventQueue", "FAILED", "FleetMetrics", "FleetSimulator",
+    "ActiveRepair", "ClusterEnsemble", "ClusterState", "DataPlane",
+    "Event", "EventQueue", "FAILED", "FleetMetrics", "FleetSimulator",
     "FixedPolicy", "FlexiblePolicy", "HEALTHY", "LinkShareModel",
-    "QueuedRepair", "REPAIRING", "RepairPolicy", "SCENARIOS", "Scenario",
-    "apply_credit", "bootstrap_cis", "capacity_weather", "cluster_seed",
-    "flaky_providers", "foggy_estimates", "hot_reads", "make_policy",
-    "mitigated", "plan_links", "pool_metrics", "rack_bursts", "simulate",
-    "steady", "stragglers", "tiered", "tiered_capacities",
+    "QueuedRepair", "REPAIRING", "ReadTrace", "RepairPolicy", "SCENARIOS",
+    "Scenario", "apply_credit", "bootstrap_cis", "capacity_weather",
+    "cluster_seed", "flaky_providers", "foggy_estimates", "generate_trace",
+    "hot_reads", "make_policy", "mitigated", "plan_links", "pool_metrics",
+    "rack_bursts", "simulate", "steady", "stragglers", "tiered",
+    "tiered_capacities",
 ]

@@ -87,6 +87,10 @@ def pool_metrics(members: Sequence[FleetMetrics]) -> FleetMetrics:
         pooled.regen_times.extend(m.regen_times)
         pooled.vulnerability_windows.extend(m.vulnerability_windows)
         pooled.wait_times.extend(m.wait_times)
+        pooled.read_latencies.extend(m.read_latencies)
+        # dataplane summary keys are conditional on the flag, so a single
+        # dataplane member is enough to surface them for the whole pool
+        pooled.dataplane = pooled.dataplane or m.dataplane
     return pooled
 
 

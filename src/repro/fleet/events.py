@@ -33,6 +33,12 @@ RECOVER = "recover"
 ESTIMATE_REFRESH = "estimate_refresh"
 WATCHDOG = "watchdog"
 
+# Coded data plane (ISSUE 10): an open-loop read arrival replayed from a
+# ``ReadTrace`` — unlike READ_ARRIVAL these fire on the trace's own clock
+# whether or not a slot is down (payload: none; the next trace line is
+# pulled lazily when this one fires).
+TRACE_READ = "trace_read"
+
 
 @dataclasses.dataclass(frozen=True)
 class Event:

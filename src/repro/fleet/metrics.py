@@ -57,6 +57,16 @@ COUNTER_SUMMARY_KEYS: Dict[str, str] = {
     "degraded_admissions": "degraded_admissions",
     "degrade_events": "degrade_events",
     "max_backlog": "max_backlog",
+    # coded data plane (ISSUE 10) — these summary keys are emitted only
+    # when the dataplane flag is set (any dataplane hook sets it), so the
+    # default-path summaries, and with them the fleet golden, are unchanged
+    "reads_completed": "reads_completed",
+    "reads_dropped": "reads_dropped",
+    "reads_torn_down": "reads_torn_down",
+    "decode_checks": "decode_checks",
+    "decode_failures": "decode_failures",
+    "repair_bytes": "repair_bytes",
+    "read_bytes": "read_bytes",
 }
 
 
@@ -98,12 +108,24 @@ class FleetMetrics:
     degraded_admissions: int = 0       # repairs admitted with d' < d
     degrade_events: int = 0            # injected + Markov brownouts
 
+    # -- coded data plane (ISSUE 10) ----------------------------------------
+    dataplane: bool = False            # gates the dataplane_* summary keys;
+    #                                    set by the simulator / any hook below
+    reads_completed: int = 0           # fragment-transfer reads delivered
+    reads_dropped: int = 0             # trace arrivals with < fanin+1 healthy
+    reads_torn_down: int = 0           # in-flight reads killed by a failure
+    decode_checks: int = 0             # post-repair can_reconstruct checks
+    decode_failures: int = 0           # checks where k nodes could NOT decode
+    repair_bytes: float = 0.0          # coded repair bytes on the wire
+    read_bytes: float = 0.0            # fragment read bytes on the wire
+
     plan_errors: List[float] = dataclasses.field(default_factory=list)
     credit_fractions: List[float] = dataclasses.field(default_factory=list)
     regen_times: List[float] = dataclasses.field(default_factory=list)
     vulnerability_windows: List[float] = dataclasses.field(
         default_factory=list)
     wait_times: List[float] = dataclasses.field(default_factory=list)
+    read_latencies: List[float] = dataclasses.field(default_factory=list)
     backlog_timeline: List[Tuple[float, int]] = dataclasses.field(
         default_factory=list)
 
@@ -190,6 +212,39 @@ class FleetMetrics:
     def on_data_loss(self) -> None:
         self.data_loss_events += 1
 
+    # -- coded data plane (ISSUE 10) ----------------------------------------
+
+    def on_read_complete(self, latency: float, nbytes: float) -> None:
+        """A fragment-transfer read delivered all its bytes."""
+        self.dataplane = True
+        self.reads_completed += 1
+        self.read_latencies.append(latency)
+        self.read_bytes += nbytes
+
+    def on_read_drop(self) -> None:
+        """A trace arrival found fewer than fanin + 1 healthy nodes."""
+        self.dataplane = True
+        self.reads_dropped += 1
+
+    def on_read_teardown(self, nbytes: float) -> None:
+        """A failure killed an in-flight read; ``nbytes`` already crossed
+        the wire and still count as read traffic."""
+        self.dataplane = True
+        self.reads_torn_down += 1
+        self.read_bytes += nbytes
+
+    def on_repair_bytes(self, nbytes: float) -> None:
+        """A repair segment ended, having moved ``nbytes`` of coded blocks."""
+        self.dataplane = True
+        self.repair_bytes += nbytes
+
+    def on_decode_check(self, ok: bool) -> None:
+        """Post-repair decode verification via ``rlnc.can_reconstruct``."""
+        self.dataplane = True
+        self.decode_checks += 1
+        if not ok:
+            self.decode_failures += 1
+
     # -- summary ------------------------------------------------------------
 
     @staticmethod
@@ -200,7 +255,7 @@ class FleetMetrics:
         dur = max(self.now, 1e-300)
         mttdl = (dur / self.expected_losses
                  if self.expected_losses > 0 else math.inf)
-        return {
+        out = {
             "duration": self.now,
             "completed": self.completed,
             "aborted": self.aborted,
@@ -234,3 +289,18 @@ class FleetMetrics:
             "plan_err_p50": self._pct(self.plan_errors, 50),
             "plan_err_p99": self._pct(self.plan_errors, 99),
         }
+        if self.dataplane:
+            out.update({
+                "reads_completed": self.reads_completed,
+                "reads_dropped": self.reads_dropped,
+                "reads_torn_down": self.reads_torn_down,
+                "decode_checks": self.decode_checks,
+                "decode_failures": self.decode_failures,
+                "repair_bytes": self.repair_bytes,
+                "read_bytes": self.read_bytes,
+                "read_p50": self._pct(self.read_latencies, 50),
+                "read_p99": self._pct(self.read_latencies, 99),
+                "read_mean": (float(np.mean(self.read_latencies))
+                              if self.read_latencies else 0.0),
+            })
+        return out

@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.storage.capacities import ClusterCapSampler, uniform_matrix
 
+from .dataplane import ReadTrace
+
 
 def tiered_capacities(num_pods: int = 2, hosts_per_pod: int = 0,
                       block_mb: float = 64.0,
@@ -134,6 +136,30 @@ class Scenario:
     trace_capacity: int = 1 << 16     # ring-buffer size (oldest events are
     #                                   overwritten past it, counted as
     #                                   dropped)
+    # -- coded data plane (ISSUE 10; OFF by default: with dataplane off the
+    #    simulator allocates no coded store, consumes no extra rng, and the
+    #    default path stays bitwise identical) -----------------------------
+    dataplane: bool = False           # reads become k fragment transfers
+    #                                   through fair-share contention
+    #                                   (read_duration is ignored) and every
+    #                                   completed repair replays its plan on
+    #                                   a real RLNC-coded store
+    dataplane_block_bytes: float = 64 * 1024 * 1024   # wire bytes per code
+    #                                   block (64 MiB, matching the tiered
+    #                                   topology's block_mb)
+    dataplane_blocks: int = 0         # mini-code file size M for the coded
+    #                                   store; 0 = 2k.  Must be divisible by
+    #                                   k (integral alpha)
+    dataplane_payload_bytes: int = 8  # GF payload bytes per stored block
+    dataplane_matmul: str = "auto"    # GF matmul backend for the store:
+    #                                   auto | kernel | numpy (see
+    #                                   DataPlane._resolve_matmul)
+    dataplane_verify: bool = False    # decode-check (can_reconstruct) after
+    #                                   every completed repair
+    read_trace: Optional[ReadTrace] = None    # open-loop read arrivals
+    #                                   (requires dataplane=True); served
+    #                                   whenever >= fanin + 1 nodes are
+    #                                   healthy, dropped + counted otherwise
 
     def __post_init__(self):
         if self.num_nodes < 2:
@@ -201,6 +227,28 @@ class Scenario:
         if self.trace_capacity < 1:
             raise ValueError(
                 f"trace_capacity must be >= 1, got {self.trace_capacity}")
+        if self.dataplane and self.read_fanin > self.num_nodes - 1:
+            raise ValueError(
+                f"read_fanin={self.read_fanin} exceeds the {self.num_nodes - 1} "
+                f"possible helpers of an {self.num_nodes}-node cluster: with "
+                f"dataplane=True every read needs fanin live sources besides "
+                f"its destination, so such a read could never be served")
+        if self.read_trace is not None and not self.dataplane:
+            raise ValueError(
+                "read_trace= is an open-loop data-plane workload and needs "
+                "dataplane=True (the legacy phantom-read path is closed-loop "
+                "via read_rate and only fires while a slot is down)")
+        if self.dataplane:
+            if self.dataplane_block_bytes <= 0:
+                raise ValueError("dataplane_block_bytes must be positive")
+            if self.dataplane_payload_bytes < 1:
+                raise ValueError("dataplane_payload_bytes must be >= 1")
+            if self.dataplane_blocks < 0:
+                raise ValueError("dataplane_blocks must be >= 0 (0 = 2k)")
+            if self.dataplane_matmul not in ("auto", "kernel", "numpy"):
+                raise ValueError(
+                    f"dataplane_matmul must be auto|kernel|numpy, got "
+                    f"{self.dataplane_matmul!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -241,12 +289,21 @@ def capacity_weather(n: int, failure_rate: float = 2e-3,
 
 
 def hot_reads(n: int, failure_rate: float = 2e-3,
-              duration: float = 20_000.0) -> Scenario:
+              duration: float = 20_000.0, dataplane: bool = False,
+              read_trace: Optional[ReadTrace] = None,
+              dataplane_verify: bool = False) -> Scenario:
     """Degraded-read pressure: while any slot is down, reconstruction reads
-    arrive and contend with repairs for the same links."""
+    arrive and contend with repairs for the same links.
+
+    With ``dataplane=True`` the reads become real fragment transfers
+    (ISSUE 10); passing a ``read_trace`` switches to the open-loop
+    trace-driven workload and turns the closed-loop ``read_rate`` off.
+    The defaults leave both off, so the golden rows are untouched."""
     return Scenario(num_nodes=n, duration=duration,
                     failure_rate=failure_rate,
-                    read_rate=0.05, read_duration=20.0)
+                    read_rate=0.0 if read_trace is not None else 0.05,
+                    read_duration=20.0, dataplane=dataplane,
+                    read_trace=read_trace, dataplane_verify=dataplane_verify)
 
 
 def tiered(n: int, failure_rate: float = 2e-3,

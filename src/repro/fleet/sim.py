@@ -80,11 +80,25 @@ Every emission site is guarded and none touches an rng stream, so traced
 and untraced runs are bitwise identical (pinned by the goldens and
 tests/test_obs.py): tracing is observation, not perturbation.
 
+Coded data plane (ISSUE 10), OFF by default: with ``Scenario.dataplane``
+on, degraded reads become real fragment transfers (``params.alpha``
+blocks per source) progressing through the same fair-share fluid model
+as repairs — ``read_duration`` is ignored — and every completed repair
+replays its plan on an RLNC-coded store (``repro.storage.simulator``)
+so the regenerated blocks can be decode-verified.  Per-link repair/read
+bytes are ledgered in ``fleet.dataplane.DataPlane``; an optional
+``Scenario.read_trace`` adds an open-loop arrival process on the
+dedicated ``"data"`` rng stream.  Off, no coded store is allocated, no
+extra rng is drawn, and every new code path is behind a ``dataplane is
+None`` guard — the default instruction stream is unchanged (pinned by
+the fleet golden).
+
 Determinism: one root ``seed`` spawns named child streams (capacities,
-failures, providers, reads, shocks, estimates, degrades) via
+failures, providers, reads, shocks, estimates, degrades, data plane) via
 ``np.random.default_rng([seed, stream])``, and all same-time events have
-fixed precedence (completions, then heap order, then the Poisson failure
-clock, then the Poisson degrade clock), so a run is bitwise reproducible.
+fixed precedence (repair completions, then read completions, then heap
+order, then the Poisson failure clock, then the Poisson degrade clock),
+so a run is bitwise reproducible.
 """
 from __future__ import annotations
 
@@ -100,7 +114,7 @@ from repro.obs import FlightRecorder, LinkUsageTracer
 from .cluster import ClusterState
 from .events import (CAPACITY_SHOCK, DEGRADE, ESTIMATE_REFRESH, Event,
                      EventQueue, FAILURE, READ_ARRIVAL, READ_DEPARTURE,
-                     RECOVER, WATCHDOG)
+                     RECOVER, TRACE_READ, WATCHDOG)
 from .metrics import FleetMetrics
 from .policy import RepairPolicy
 from .scenario import Scenario
@@ -108,7 +122,7 @@ from .sharing import (ActiveRepair, Link, LinkShareModel, apply_credit,
                       plan_links)
 
 _STREAMS = {"caps": 0, "fail": 1, "prov": 2, "read": 3, "shock": 4,
-            "est": 5, "degrade": 6}
+            "est": 5, "degrade": 6, "data": 7}
 
 
 class QueuedRepair(NamedTuple):
@@ -189,11 +203,12 @@ class FleetSimulator:
         self._read_seq = 0
         self._replan_pending = False
         self.loop_events = 0        # event epochs processed (perf metric)
-        # (next event time, completion time, completion index, heap time)
-        # cached by _refresh_pending after every step — this is what the
-        # lockstep ensemble driver reads through next_event_time()
-        self._pending: Tuple[float, float, int, float] = \
-            (math.inf, math.inf, -1, math.inf)
+        # (next event time, completion time, completion index, heap time,
+        # read-completion time, read index) cached by _refresh_pending
+        # after every step — this is what the lockstep ensemble driver
+        # reads through next_event_time()
+        self._pending: Tuple[float, float, int, float, float, int] = \
+            (math.inf, math.inf, -1, math.inf, math.inf, -1)
         self._started = False
 
         # -- straggler/stall injection: per-node outgoing-rate multipliers.
@@ -238,6 +253,23 @@ class FleetSimulator:
 
         self.metrics = FleetMetrics(n=n, k=params.k,
                                     failure_rate=scenario.failure_rate)
+
+        # -- coded data plane (ISSUE 10): allocated only when asked for;
+        #    every touchpoint below is behind a ``dataplane is None`` guard
+        #    and the "data" rng stream is drawn only here, so the default
+        #    path keeps the exact pre-dataplane instruction stream
+        self.dataplane = None
+        self._trace_iter = None
+        if scenario.dataplane:
+            from .dataplane import DataPlane
+            self.dataplane = DataPlane(scenario, params, self.shares,
+                                       self.metrics, seed,
+                                       recorder=self.recorder)
+            self.metrics.dataplane = True
+            if scenario.read_trace is not None:
+                self._trace_iter = scenario.read_trace.arrivals(
+                    self.rng["data"], scenario.duration)
+                self._push_next_trace_read()
 
     # -- flight recorder helpers --------------------------------------------
 
@@ -387,12 +419,20 @@ class FleetSimulator:
             links = self.reads.pop(rid)
             self.shares.release(links)
             self._unindex_read(rid, links)
+        # data-plane reads touching the node die too (partial fragment
+        # bytes already on the wire stay in the read ledger)
+        if self.dataplane is not None:
+            self.dataplane.teardown_node(node, self.now)
         # abort in-flight repairs that lost a provider.  node is healthy
         # until this failure while every r.ids[0] slot is REPAIRING, so
         # membership in ids is membership in the providers tail
         lost = [i for i, r in enumerate(self.active) if node in r.ids]
         for i in reversed(lost):
             r = self.active.pop(i)
+            if self.dataplane is not None:
+                # the delivered fraction of this segment crossed the wire;
+                # ledger it before release/rebase destroy the progress state
+                self.dataplane.account_repair_wire(r, 1.0 - r.remaining)
             self.shares.release(r.links, r)
             self.cluster.abort_repair(r.node)
             if self.scenario.carryover:
@@ -463,6 +503,11 @@ class FleetSimulator:
             self.recorder.emit(self.now, "capacity_shock")
 
     def _read_arrival(self) -> None:
+        """Closed-loop degraded read (legacy ``read_rate`` path): only fires
+        while a slot is down.  With the data plane on, the identical rng
+        draws pick the endpoints, then the read becomes a fragment-transfer
+        flow (completion from contention; ``read_duration`` ignored)
+        instead of a fixed-duration phantom."""
         sc = self.scenario
         healthy = self.cluster.healthy_nodes()
         fanin = sc.read_fanin or self.params.k
@@ -474,18 +519,54 @@ class FleetSimulator:
             # so the rng draw below sees the identical pool size
             idx = self.rng["read"].choice(len(healthy) - 1, size=fanin,
                                           replace=False)
-            links = [((healthy[j if j < dst_i else j + 1], dst), 1.0)
-                     for j in (int(i) for i in idx)]
-            self.shares.acquire(links)
-            rid = self._read_seq
-            self._read_seq += 1
-            self.reads[rid] = links
-            self._index_read(rid, links)
-            self.events.push(Event(self.now + sc.read_duration,
-                                   READ_DEPARTURE, (rid,)))
+            picked = [healthy[j if j < dst_i else j + 1]
+                      for j in (int(i) for i in idx)]
+            if self.dataplane is not None:
+                self.dataplane.start_read(self.now, dst, picked)
+            else:
+                links = [((src, dst), 1.0) for src in picked]
+                self.shares.acquire(links)
+                rid = self._read_seq
+                self._read_seq += 1
+                self.reads[rid] = links
+                self._index_read(rid, links)
+                self.events.push(Event(self.now + sc.read_duration,
+                                       READ_DEPARTURE, (rid,)))
         self.events.push(Event(
             self.now + float(self.rng["read"].exponential(1.0 / sc.read_rate)),
             READ_ARRIVAL))
+
+    def _push_next_trace_read(self) -> None:
+        """Pull the next open-loop arrival lazily (one at a time, so file
+        traces of millions of reads never materialize in memory)."""
+        t = next(self._trace_iter, None)
+        if t is not None:
+            self.events.push(Event(float(t), TRACE_READ))
+
+    def _trace_read_arrival(self) -> None:
+        """Open-loop trace read (ISSUE 10 satellite semantics): served
+        whenever >= fanin + 1 healthy nodes exist — degraded or not, an
+        open-loop user read always fetches its fragments — and *dropped*
+        (counted, recorded) otherwise.  Contrast ``_read_arrival``, whose
+        closed-loop reads model degraded-slot reconstruction and only fire
+        while a slot is down.  Endpoint draws come from the dedicated
+        "data" stream, so trace mode never shifts the legacy read stream."""
+        dp = self.dataplane
+        healthy = self.cluster.healthy_nodes()
+        if len(healthy) > dp.fanin:
+            rngd = self.rng["data"]
+            dst_i = int(rngd.integers(0, len(healthy)))
+            dst = healthy[dst_i]
+            idx = rngd.choice(len(healthy) - 1, size=dp.fanin, replace=False)
+            picked = [healthy[j if j < dst_i else j + 1]
+                      for j in (int(i) for i in idx)]
+            dp.start_read(self.now, dst, picked)
+        else:
+            self.metrics.on_read_drop()
+            if self.recorder is not None:
+                self.recorder.emit(self.now, "read_drop",
+                                   healthy=len(healthy), fanin=dp.fanin)
+        self._push_next_trace_read()
 
     def _read_departure(self, rid: int) -> None:
         links = self.reads.pop(rid, None)
@@ -710,6 +791,8 @@ class FleetSimulator:
                 plan, links, bank, credited, total, eta_new = best
                 if eta_new >= r.eta():
                     continue
+                if self.dataplane is not None:
+                    self.dataplane.account_repair_wire(r, 1.0 - r.remaining)
                 self.shares.release(r.links, r)
                 r.rebase(plan, links, bank)
                 self.shares.acquire(r.links, r)
@@ -721,7 +804,7 @@ class FleetSimulator:
                                        node=r.node, kind="migration",
                                        scheme=plan.scheme, credited=credited,
                                        total=total, predicted=eta_new)
-                self.shares.recompute(self.active)
+                self.shares.recompute(self._contending())
 
     def _best_candidate(self, r: ActiveRepair, plans: Sequence,
                         ) -> Optional[tuple]:
@@ -833,6 +916,8 @@ class FleetSimulator:
         plan, links, bank, credited, total, eta_new = best
         if eta_new >= r.eta():
             return
+        if self.dataplane is not None:
+            self.dataplane.account_repair_wire(r, 1.0 - r.remaining)
         self.shares.release(r.links, r)
         r.rebase(plan, links, bank)
         self.shares.acquire(r.links, r)
@@ -844,7 +929,7 @@ class FleetSimulator:
                                node=r.node, kind="watchdog",
                                scheme=plan.scheme, credited=credited,
                                total=total, predicted=eta_new)
-        self.shares.recompute(self.active)
+        self.shares.recompute(self._contending())
 
     def _evict_straggler(self, r: ActiveRepair) -> None:
         """Evict the provider feeding the repair's bottleneck link —
@@ -866,6 +951,8 @@ class FleetSimulator:
         if worst_link is None:              # no evictable residual links
             return
         straggler = worst_link[0]
+        if self.dataplane is not None:
+            self.dataplane.account_repair_wire(r, 1.0 - r.remaining)
         self.shares.release(r.links, r)
         self.active.remove(r)
         self.cluster.abort_repair(r.node)
@@ -886,6 +973,18 @@ class FleetSimulator:
                                node=r.node, reason="evict")
 
     # -- main loop ----------------------------------------------------------
+
+    def _contending(self) -> List[ActiveRepair]:
+        """Every flow the share engine must keep fresh: active repairs
+        plus in-flight data-plane reads (one population — the incremental
+        engine refreshes exactly the items passed here, and its
+        registration-count fast path compares against this list's
+        length).  With the data plane off this IS ``self.active``, so the
+        default path passes the identical object it always did."""
+        dp = self.dataplane
+        if dp is None or not dp.reads:
+            return self.active
+        return self.active + dp.reads
 
     def _next_completion(self) -> Tuple[float, int]:
         """(absolute time, index into self.active) of the earliest finishing
@@ -922,6 +1021,8 @@ class FleetSimulator:
                     r.remaining = rem if rem > 0.0 else 0.0
                 elif nom == 0.0:
                     r.remaining = 0.0
+        if self.dataplane is not None:
+            self.dataplane.advance_reads(dt)
         self.now = t
         self.metrics.observe(t, len(self.queue) + len(self.active),
                              self.cluster.num_unavailable)
@@ -930,6 +1031,13 @@ class FleetSimulator:
         r = self.active.pop(i)
         if self.recorder is not None:
             self._emit_complete(r)          # before releasing the links
+        if self.dataplane is not None:
+            # the final segment delivered in full; ledger its wire bytes,
+            # then replay the plan on the coded store (provider encode /
+            # interior relay / newcomer regenerate) and optionally
+            # decode-verify the regenerated node
+            self.dataplane.account_repair_wire(r, 1.0)
+            self.dataplane.on_repair_complete(r, self.now)
         r.remaining = 0.0
         self.shares.release(r.links, r)
         self.cluster.complete_repair(r.node)
@@ -938,6 +1046,9 @@ class FleetSimulator:
         # the healthy population grew: re-draw the aggregate failure clock
         # (memorylessness makes the re-draw exact, same as on failures)
         self.next_fail = self._draw_next_fail()
+
+    def _complete_read(self, ri: int) -> None:
+        self.dataplane.complete_read(ri, self.now)
 
     def _refresh_pending(self) -> None:
         """Cache (next event time, completion time, completion index, heap
@@ -948,9 +1059,14 @@ class FleetSimulator:
         :meth:`next_event_time` to the lockstep ensemble driver without
         re-scanning the active set."""
         t_comp, ci = self._next_completion()
+        if self.dataplane is not None:
+            t_read, ri = self.dataplane.next_read_completion(self.now)
+        else:
+            t_read, ri = math.inf, -1
         t_exo = self.events.peek_time()
-        t_next = min(t_comp, t_exo, self.next_fail, self.next_degrade)
-        self._pending = (t_next, t_comp, ci, t_exo)
+        t_next = min(t_comp, t_read, t_exo, self.next_fail,
+                     self.next_degrade)
+        self._pending = (t_next, t_comp, ci, t_exo, t_read, ri)
 
     def next_event_time(self) -> float:
         """Absolute time of the next event epoch (``inf`` when idle) —
@@ -967,7 +1083,7 @@ class FleetSimulator:
         self.metrics.observe(0.0, len(self.queue) + len(self.active),
                              self.cluster.num_unavailable)
         self._drain_queue()
-        self.shares.recompute(self.active)
+        self.shares.recompute(self._contending())
         self._refresh_pending()
 
     def step(self) -> bool:
@@ -976,17 +1092,23 @@ class FleetSimulator:
         ``run()`` is ``start(); while step(): pass`` — the split lets the
         ensemble driver interleave many simulators in lockstep."""
         end = self.scenario.duration
-        t_next, t_comp, ci, t_exo = self._pending
+        t_next, t_comp, ci, t_exo, t_read, ri = self._pending
         if t_next > end or not math.isfinite(t_next):
             self._advance(end)
             return False
         self.loop_events += 1
         self._advance(t_next)
-        # fixed same-time precedence: completion, heap, Poisson failure
-        # clock, Poisson degrade clock
-        if (t_comp <= t_exo and t_comp <= self.next_fail
+        # fixed same-time precedence: repair completion, read completion,
+        # heap, Poisson failure clock, Poisson degrade clock (with the
+        # data plane off t_read is inf, so the dispatch reduces to the
+        # pre-dataplane chain bitwise)
+        if (t_comp <= t_read and t_comp <= t_exo
+                and t_comp <= self.next_fail
                 and t_comp <= self.next_degrade):
             self._complete(ci)
+        elif (t_read <= t_exo and t_read <= self.next_fail
+                and t_read <= self.next_degrade):
+            self._complete_read(ri)
         elif t_exo <= self.next_fail and t_exo <= self.next_degrade:
             ev = self.events.pop()
             if ev.kind == FAILURE:
@@ -1007,6 +1129,8 @@ class FleetSimulator:
                 self._read_arrival()
             elif ev.kind == READ_DEPARTURE:
                 self._read_departure(ev.payload[0])
+            elif ev.kind == TRACE_READ:
+                self._trace_read_arrival()
             elif ev.kind == DEGRADE:
                 self._apply_degrade(*ev.payload)
             elif ev.kind == RECOVER:
@@ -1030,10 +1154,10 @@ class FleetSimulator:
         if self._replan_pending:
             self._replan_pending = False
             if self.scenario.migration and self.active:
-                self.shares.recompute(self.active)
+                self.shares.recompute(self._contending())
                 self._maybe_replan()
         self._drain_queue()
-        self.shares.recompute(self.active)
+        self.shares.recompute(self._contending())
         self.metrics.observe(self.now,
                              len(self.queue) + len(self.active),
                              self.cluster.num_unavailable)
@@ -1049,6 +1173,8 @@ class FleetSimulator:
             # ride in the trace header, so one file is self-contained
             self.link_tracer.finish(self.now)
             self.recorder.meta["links"] = self.link_tracer.snapshot()
+            if self.dataplane is not None:
+                self.recorder.meta["dataplane"] = self.dataplane.snapshot()
             self.recorder.meta["summary"] = self.metrics.summary()
         return self.metrics
 

@@ -3,10 +3,16 @@
 ``gf_matmul`` pads to block multiples, dispatches to the Pallas kernel (on
 TPU) or its interpret-mode execution (CPU), and slices the result.  Padding
 with zeros is sound: 0 is the additive identity of GF(2^8) and 0*x = 0.
+
+If the Pallas path raises on a host whose jax build cannot lower or
+interpret the kernel, ``gf_matmul`` falls back to the pure-jnp reference
+implementation once per process (a ``RuntimeWarning`` is emitted on the
+first trip) so coding-plane callers keep working on any CPU.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -43,14 +49,37 @@ def _padded_call(a, b, bm, bn, bk, interpret):
     return out[:m, :n]
 
 
+# Mutable cell rather than a bare global so tests can reset it via
+# monkeypatch.setitem; "active" latches True after the first Pallas failure
+# and routes every later call straight to the reference path (warn once).
+_fallback = {"active": False}
+
+_gf_matmul_ref_jit = jax.jit(gf_matmul_ref)
+
+
 def gf_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512,
               interpret: bool | None = None) -> jnp.ndarray:
-    """GF(2^8) matmul with automatic padding; kernel on TPU, interpret on CPU."""
+    """GF(2^8) matmul with automatic padding; kernel on TPU, interpret on CPU.
+
+    Falls back to the jitted pure-jnp reference (same results, no Pallas)
+    if the kernel path raises — some CPU-only jax builds cannot even
+    interpret Pallas calls, and the coding plane must not die with them.
+    """
     a = jnp.asarray(a, jnp.uint8)
     b = jnp.asarray(b, jnp.uint8)
+    if _fallback["active"]:
+        return _gf_matmul_ref_jit(a, b)
     if interpret is None:
         interpret = not _on_tpu()
-    return _padded_call(a, b, bm, bn, bk, interpret)
+    try:
+        return _padded_call(a, b, bm, bn, bk, interpret)
+    except Exception as exc:  # pragma: no branch - single fallback trip
+        _fallback["active"] = True
+        warnings.warn(
+            f"Pallas GF(2^8) kernel unavailable on this host ({exc!r}); "
+            "falling back to the pure-jnp reference implementation",
+            RuntimeWarning, stacklevel=2)
+        return _gf_matmul_ref_jit(a, b)
 
 
 def gf_matmul_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:

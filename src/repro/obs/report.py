@@ -11,7 +11,9 @@ questions the end-of-run scalars cannot:
   repairs (realized >> predicted ETA) completed on, with the excess
   seconds attributed per link;
 * :func:`node_brownout_timeline` — per-node degrade episodes and total
-  degraded time.
+  degraded time;
+* :func:`top_links_by_bytes` — which links moved the most data-plane
+  bytes (coded repair blocks + degraded-read fragments, ISSUE 10).
 
 Run as a module for a text report::
 
@@ -99,6 +101,42 @@ def top_bottleneck_links(header: dict, events: List[dict],
                   key=lambda kv: (-kv[1]["user_seconds"], kv[0]))[:k]
 
 
+def link_bytes(header: dict, events: List[dict]) -> dict:
+    """Per-link data-plane wire bytes:
+    ``{"src->dst": {"repair_bytes": x, "read_bytes": y}}``.
+
+    Prefers the exact ledger the simulator stored in the header
+    (``meta.dataplane.links``, written by ``DataPlane.snapshot``); falls
+    back to summing ``repair_block`` events when the snapshot is absent
+    (read bytes cannot be reconstructed that way — ``read_complete``
+    carries a total, not per-link splits — so the fallback reports
+    repair bytes only).  Empty dict when the run had no data plane.
+    """
+    meta = header.get("meta", {})
+    snap = meta.get("dataplane")
+    if snap and snap.get("links"):
+        return snap["links"]
+    out: Dict[str, dict] = {}
+    for e in events:
+        if e["ev"] != "repair_block":
+            continue
+        key = f"{e['producer']}->{e['dst']}"
+        cell = out.setdefault(key, {"repair_bytes": 0.0, "read_bytes": 0.0})
+        cell["repair_bytes"] += e["bytes"]
+    return out
+
+
+def top_links_by_bytes(header: dict, events: List[dict],
+                       k: int = 10) -> List[Tuple[str, dict]]:
+    """The ``k`` links that moved the most data-plane bytes (repair +
+    read), sorted heaviest first, name-tiebroken."""
+    stats = link_bytes(header, events)
+    return sorted(
+        stats.items(),
+        key=lambda kv: (-(kv[1].get("repair_bytes", 0.0)
+                          + kv[1].get("read_bytes", 0.0)), kv[0]))[:k]
+
+
 def watchdog_funnel(events: List[dict]) -> dict:
     """The mitigation ladder as a funnel of event counts."""
     return {
@@ -181,6 +219,15 @@ def render_report(header: dict, events: List[dict], top: int = 10) -> str:
         lines.append(f"  {key:>10}  busy {st['busy_time']:10.1f}s  "
                      f"user-s {st['user_seconds']:10.1f}  "
                      f"peak users {st['max_users']}")
+    dp_bytes = top_links_by_bytes(header, events, top)
+    if dp_bytes:
+        lines += ["", f"top {min(top, len(dp_bytes))} links by data-plane "
+                  "bytes (repair + read):"]
+        for key, st in dp_bytes:
+            rb = st.get("repair_bytes", 0.0)
+            db = st.get("read_bytes", 0.0)
+            lines.append(f"  {key:>10}  repair {rb / 1e9:10.3f} GB  "
+                         f"read {db / 1e9:10.3f} GB")
     funnel = watchdog_funnel(events)
     lines += ["", "watchdog funnel: "
               f"{funnel['flags']} flagged -> {funnel['replans']} replanned "

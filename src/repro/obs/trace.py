@@ -45,7 +45,7 @@ TRACE_KIND = "repro.fleet.trace"
 _US = 1e6                         # simulated seconds -> trace microseconds
 
 # Chrome trace "processes" grouping the tracks
-_PID_REPAIRS, _PID_NODES, _PID_LINKS = 1, 2, 3
+_PID_REPAIRS, _PID_NODES, _PID_LINKS, _PID_READS = 1, 2, 3, 4
 
 
 def json_sanitize(obj: Any) -> Any:
@@ -167,8 +167,13 @@ def chrome_trace(events: Iterable[dict],
     * ``node_fail`` .. ``node_repaired`` become ``down`` spans and
       ``node_degrade`` .. ``node_recover`` become ``brownout`` spans on
       the nodes process (a re-degrade supersedes: the open span closes).
+    * ``read_queued`` .. ``read_complete`` / ``read_abort`` become
+      ``read`` spans (cat ``read``) on the reads process — a category
+      distinct from ``repair`` so repair-transfer span counting is
+      untouched by the data plane.
     * ``link_users`` becomes a per-link counter track (occupancy over
-      time); everything else is an instant event.
+      time); everything else (including ``read_drop`` and
+      ``repair_block``) is an instant event.
 
     Spans still open when the log ends (or whose begin was overwritten by
     the ring buffer) are closed at the last timestamp with
@@ -177,7 +182,7 @@ def chrome_trace(events: Iterable[dict],
     """
     te: List[dict] = []
     for pid, pname in ((_PID_REPAIRS, "repairs"), (_PID_NODES, "nodes"),
-                       (_PID_LINKS, "links")):
+                       (_PID_LINKS, "links"), (_PID_READS, "reads")):
         te.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
                    "ts": 0, "args": {"name": pname}})
 
@@ -234,6 +239,16 @@ def chrome_trace(events: Iterable[dict],
                   _PID_NODES, node, ts, args)
         elif ev == "node_recover":
             end(("brownout", node), ts, args)
+        elif ev == "read_queued":
+            # data-plane reads (ISSUE 10): span per read on the reads
+            # process, cat "read" — deliberately NOT "repair" so
+            # finished-transfer counting stays a pure repair invariant
+            begin(("r", e.get("rdid")), "read", "read", e.get("rdid"),
+                  _PID_READS, e.get("dst", 0), ts, args)
+        elif ev == "read_complete":
+            end(("r", e.get("rdid")), ts, dict(args, reason="complete"))
+        elif ev == "read_abort":
+            end(("r", e.get("rdid")), ts, dict(args, reason="abort"))
         elif ev == "link_users":
             te.append({"ph": "C", "name": f"link {e['src']}->{e['dst']}",
                        "pid": _PID_LINKS, "tid": 0, "ts": ts,

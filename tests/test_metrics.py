@@ -81,6 +81,14 @@ def _fire_all_counters(m: FleetMetrics) -> None:
     m.on_watchdog_giveup()
     m.on_degraded_admission()
     m.on_degrade()
+    # data-plane hooks (ISSUE 10): these also latch the dataplane flag, so
+    # the conditional summary keys surface for the round-trip asserts
+    m.on_read_complete(2.0, 1024.0)
+    m.on_read_drop()
+    m.on_read_teardown(128.0)
+    m.on_repair_bytes(2048.0)
+    m.on_decode_check(True)
+    m.on_decode_check(False)
 
 
 def test_every_counter_round_trips_into_summary():
